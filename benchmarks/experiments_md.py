@@ -1,0 +1,110 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from the dry-run
+JSONs + bench_results.json. Keeps the document reproducible:
+
+    PYTHONPATH=src python -m benchmarks.experiments_md > EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name):
+    p = os.path.join(ROOT, name)
+    return json.load(open(p)) if os.path.exists(p) else []
+
+
+def dryrun_section():
+    print("### §Dry-run — per-cell compile results (512 placeholder devices)\n")
+    for path, mesh in [("dryrun_1pod.json", "16×16 (256 chips)"),
+                       ("dryrun_2pod.json", "2×16×16 (512 chips)")]:
+        rs = _load(path)
+        ok = [r for r in rs if r["status"] == "ok"]
+        sk = [r for r in rs if r["status"] == "skipped"]
+        er = [r for r in rs if r["status"] == "error"]
+        print(f"**Mesh {mesh}**: {len(ok)} compiled OK, {len(sk)} skipped "
+              f"(documented), {len(er)} errors\n")
+        print("| arch | shape | params | compile s | peak bytes/dev | "
+              "temp bytes/dev | collective schedule (bytes by kind) |")
+        print("|---|---|---|---|---|---|---|")
+        for r in ok:
+            mem = r.get("memory", {})
+            rl = r.get("roofline", {})
+            colls = {k.replace("coll_", ""): v for k, v in rl.items()
+                     if k.startswith("coll_") and k not in
+                     ("coll_ici", "coll_dcn") and v > 0}
+            cs = ", ".join(f"{k}:{v:.2e}" for k, v in sorted(colls.items()))
+            print(f"| {r['arch']} | {r['shape']} | {r['n_params']:.3e} | "
+                  f"{r.get('compile_s', 0):.0f} | "
+                  f"{mem.get('peak_memory_in_bytes', 0):.2e} | "
+                  f"{mem.get('temp_size_in_bytes', 0):.2e} | {cs} |")
+        for r in sk:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                  f"SKIPPED: {r['reason'][:70]}… |")
+        print()
+
+
+def roofline_section():
+    print("### §Roofline — three terms per cell (v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s ICI)\n")
+    for path, mesh in [("dryrun_1pod.json", "single-pod")]:
+        rs = [r for r in _load(path) if r["status"] == "ok"]
+        print(f"**{mesh}** (the roofline table is single-pod per the brief; "
+              "multi-pod compile results above)\n")
+        print("| arch | shape | T_compute (s) | T_memory (s) | "
+              "T_collective (s) | dominant | MODEL_FLOPS/HLO_FLOPS | "
+              "what moves the dominant term |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rs:
+            rl = r["roofline"]
+            hint = _hint(r)
+            print(f"| {r['arch']} | {r['shape']} | {rl['t_compute']:.3g} | "
+                  f"{rl['t_memory']:.3g} | {rl['t_collective']:.3g} | "
+                  f"{rl['dominant']} | {rl['useful_flops_ratio']:.2f} | "
+                  f"{hint} |")
+        print()
+
+
+def _hint(r) -> str:
+    rl = r["roofline"]
+    if rl["dominant"] == "collective":
+        return ("EP all-to-all instead of FSDP gathers; int8 grads on DCN"
+                if "llama4" in r["arch"] or "mixtral" in r["arch"]
+                else "overlap collectives; TP-only serve profile")
+    if rl["dominant"] == "memory":
+        if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+            return "int8 KV cache + packed pow2 weights (§Perf 2/3)"
+        return "fused/blockwise ops; bf16 scores; fold causal tiles (§Perf 1)"
+    return "already compute-bound: raise MFU via larger tiles"
+
+
+def perf_section():
+    opt = {(r["arch"], r["shape"]): r for r in _load("dryrun_opt.json")
+           if r["status"] == "ok"}
+    base = {(r["arch"], r["shape"]): r for r in _load("dryrun_1pod.json")
+            if r["status"] == "ok"}
+    if not opt:
+        return
+    print("### §Perf — optimized variants vs (fixed-sharding) baseline\n")
+    print("| cell | metric | baseline | optimized | Δ |")
+    print("|---|---|---|---|---|")
+    for key, o in opt.items():
+        b = base.get(key)
+        if b is None:
+            continue
+        for metric, label in [("t_compute", "T_compute"),
+                              ("t_memory", "T_memory"),
+                              ("t_collective", "T_collective")]:
+            vb, vo = b["roofline"][metric], o["roofline"][metric]
+            d = vb / vo if vo else float("inf")
+            print(f"| {key[0]}×{key[1]} | {label} | {vb:.3g} | {vo:.3g} | "
+                  f"{d:.2f}× |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_section()
+    roofline_section()
+    perf_section()

@@ -1,0 +1,47 @@
+"""Paper Fig. 4 analog: area/power of ours vs the post-training
+approximation baseline ([5]-style), both normalized to the exact baseline."""
+from __future__ import annotations
+
+import time
+
+from repro.core import post_training_approx
+from repro.core.area import HardwareCost
+from repro.core.genome import MLPTopology, GenomeSpec
+from repro.data import DATASETS
+
+from .common import (dataset, float_baseline, bespoke_baseline,
+                     table_ii_point, emit_row)
+
+
+def run():
+    print("# Fig. 4 analog — normalized area vs post-training baseline "
+          "(name,us_per_call,ours_norm|pt_norm|pt_acc|ours_acc)")
+    rows = {}
+    for name in DATASETS:
+        t0 = time.time()
+        ds = dataset(name)
+        topo = MLPTopology(ds.topology)
+        spec = GenomeSpec(topo)
+        fm, _ = float_baseline(name)
+        bb = bespoke_baseline(name)
+        _, pt_acc, pt_fa = post_training_approx(
+            spec, fm, ds.x_train, ds.y_train, max_loss=0.05,
+            baseline_acc=bb.accuracy)
+        ours = table_ii_point(name)
+        us = (time.time() - t0) * 1e6
+        if ours is None:
+            emit_row(f"fig4/{name}", us, "NO_FEASIBLE_POINT")
+            continue
+        acc, fa, cost, _ = ours
+        ours_norm = fa / bb.fa_count
+        pt_norm = pt_fa / bb.fa_count
+        emit_row(f"fig4/{name}", us,
+                 f"ours_norm={ours_norm:.4f}|pt_norm={pt_norm:.4f}|"
+                 f"pt_acc={pt_acc:.3f}|ours_acc={acc:.3f}")
+        rows[name] = {"ours_norm_area": ours_norm, "pt_norm_area": pt_norm,
+                      "ours_acc": acc, "pt_acc": pt_acc}
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 5 analog: printed-power-source feasibility at 1 V and 0.6 V.
+
+Categories (paper §V-C): energy harvester (<~1 mW), Blue Spark 5 mW,
+Zinergy 15 mW, Molex 30 mW, red zone (no printed source)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.area import HardwareCost, EGFET_POWER_SCALE_06V
+from repro.data import DATASETS
+
+from .common import bespoke_baseline, table_ii_point, emit_row
+
+SOURCES = [("harvester", 1.0), ("BlueSpark5mW", 5.0), ("Zinergy15mW", 15.0),
+           ("Molex30mW", 30.0)]
+
+
+def classify(power_mw: float) -> str:
+    for name, cap in SOURCES:
+        if power_mw <= cap:
+            return name
+    return "RED_ZONE"
+
+
+def run():
+    print("# Fig. 5 analog — power-source feasibility "
+          "(name,us_per_call,base_1V|ours_1V|ours_0.6V)")
+    rows = {}
+    for name in DATASETS:
+        t0 = time.time()
+        bb = bespoke_baseline(name)
+        base = HardwareCost.from_fa(bb.fa_count)
+        ours = table_ii_point(name)
+        us = (time.time() - t0) * 1e6
+        if ours is None:
+            continue
+        _, fa, cost, _ = ours
+        p06 = cost.power_mw * EGFET_POWER_SCALE_06V
+        emit_row(f"fig5/{name}", us,
+                 f"base={classify(base.power_mw)}|ours={classify(cost.power_mw)}"
+                 f"|ours_0.6V={classify(p06)}")
+        rows[name] = {"baseline_source": classify(base.power_mw),
+                      "ours_1v": classify(cost.power_mw),
+                      "ours_06v": classify(p06),
+                      "power_1v_mw": cost.power_mw, "power_06v_mw": p06}
+    return rows
+
+
+if __name__ == "__main__":
+    run()

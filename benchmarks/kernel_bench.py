@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: fitness-evaluation throughput (the paper's
+26M-evaluations workload) and pow2 storage savings.
+
+Wall-clock on this CPU container measures the jnp reference path; the Pallas
+kernels are structural (interpret-validated) — their VMEM tiling analysis is
+in EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.genome import MLPTopology, GenomeSpec
+from repro.core.mlp import population_accuracy
+from repro.core.quantize import quantize_inputs, pow2_quantize
+from repro.data import load_dataset
+
+from .common import emit_row
+
+
+def bench_fitness_throughput():
+    ds = load_dataset("cardio")
+    topo = MLPTopology(ds.topology)
+    spec = GenomeSpec(topo)
+    pop = spec.random(jax.random.PRNGKey(0), 256)
+    xi = quantize_inputs(jnp.asarray(ds.x_train), 4)
+    labels = jnp.asarray(ds.y_train)
+    fn = jax.jit(lambda p: population_accuracy(spec, p, xi, labels))
+    fn(pop).block_until_ready()
+    t0 = time.time()
+    iters = 5
+    for _ in range(iters):
+        fn(pop).block_until_ready()
+    dt = (time.time() - t0) / iters
+    evals = 256 * xi.shape[0]
+    emit_row("kernel/fitness_eval", dt * 1e6,
+             f"chromo_evals_per_s={evals / dt:.0f}|pop=256|samples={xi.shape[0]}")
+
+
+def bench_pow2_packing():
+    w = jax.random.normal(jax.random.PRNGKey(1), (4096, 4096))
+    t0 = time.time()
+    packed = jax.jit(pow2_quantize)(w).block_until_ready()
+    dt = time.time() - t0
+    emit_row("kernel/pow2_pack", dt * 1e6,
+             f"bytes_bf16={w.size * 2}|bytes_pow2={packed.size}|saving=2x"
+             f"|vs_f32=4x")
+
+
+def run():
+    print("# Kernel micro-benchmarks")
+    bench_fitness_throughput()
+    bench_pow2_packing()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run artifacts (brief deliverable (g)).
+
+Reads dryrun_1pod.json / dryrun_2pod.json (produced by
+`python -m repro.launch.dryrun --all [--multi-pod] --out …`) and prints the
+per-cell three-term roofline + dominant bottleneck. Also serves EXPERIMENTS.md
+§Roofline generation (--markdown)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import emit_row
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    p = os.path.join(ROOT, path)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def run(markdown: bool = False):
+    rows = []
+    for path, tag in [("dryrun_1pod.json", "1pod"),
+                      ("dryrun_2pod.json", "2pod")]:
+        for r in load(path):
+            if r["status"] != "ok" or "roofline" not in r:
+                continue
+            rl = r["roofline"]
+            rows.append({
+                "cell": f"{r['arch']}×{r['shape']}", "mesh": tag,
+                "t_compute": rl["t_compute"], "t_memory": rl["t_memory"],
+                "t_collective": rl["t_collective"], "dominant": rl["dominant"],
+                "useful": rl.get("useful_flops_ratio", 0.0),
+                "hbm_gb": r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+            })
+    if markdown:
+        print("| cell | mesh | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+              "| useful FLOP ratio |")
+        print("|---|---|---|---|---|---|---|")
+        for w in rows:
+            print(f"| {w['cell']} | {w['mesh']} | {w['t_compute']:.3g} | "
+                  f"{w['t_memory']:.3g} | {w['t_collective']:.3g} | "
+                  f"{w['dominant']} | {w['useful']:.2f} |")
+    else:
+        print("# Roofline (name,us_per_call,t_comp|t_mem|t_coll|dominant)")
+        for w in rows:
+            emit_row(f"roofline/{w['mesh']}/{w['cell']}",
+                     w["t_memory"] * 1e6,
+                     f"tc={w['t_compute']:.3g}|tm={w['t_memory']:.3g}|"
+                     f"tx={w['t_collective']:.3g}|dom={w['dominant']}|"
+                     f"useful={w['useful']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(markdown="--markdown" in sys.argv)

@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure + roofline +
+kernel micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import json
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+    from . import common
+    if quick:
+        common.GA_GENS = 15
+    from . import (table1_baseline, table2_approx, table3_time, fig4_sota,
+                   fig5_power, roofline_bench, kernel_bench)
+
+    results = {}
+    results["table1"] = table1_baseline.run()
+    results["table2"] = table2_approx.run()
+    results["table3"] = table3_time.run()
+    results["fig4"] = fig4_sota.run()
+    results["fig5"] = fig5_power.run()
+    results["roofline_cells"] = len(roofline_bench.run())
+    kernel_bench.run()
+    with open("bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# total bench time: {time.time() - t0:.0f}s "
+          f"(results → bench_results.json)")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table I analog: exact bespoke baseline MLPs (8-bit fixed weights,
+4-bit inputs) — topology, parameters, accuracy, area (cm²), power (mW)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.genome import MLPTopology
+from repro.core.area import HardwareCost
+from repro.data import DATASETS
+
+from .common import dataset, bespoke_baseline, emit_row
+
+# paper Table I reference values (for side-by-side reporting)
+PAPER = {
+    "breast_cancer": (0.980, 12.0, 40.0),
+    "cardio": (0.881, 33.4, 124.0),
+    "pendigits": (0.937, 67.0, 213.0),
+    "redwine": (0.564, 17.6, 73.5),
+    "whitewine": (0.537, 31.2, 126.0),
+}
+
+
+def run():
+    print("# Table I analog — exact bespoke baseline "
+          "(name,us_per_call,acc|area_cm2|power_mw|paper_acc|paper_area)")
+    rows = {}
+    for name in DATASETS:
+        t0 = time.time()
+        ds = dataset(name)
+        bb = bespoke_baseline(name)
+        cost = HardwareCost.from_fa(bb.fa_count)
+        us = (time.time() - t0) * 1e6
+        p = PAPER[name]
+        emit_row(f"table1/{name}", us,
+                 f"acc={bb.accuracy:.3f}|area={cost.area_cm2:.1f}cm2|"
+                 f"power={cost.power_mw:.1f}mW|paper_acc={p[0]}|paper_area={p[1]}")
+        rows[name] = {"accuracy": bb.accuracy, "fa": bb.fa_count,
+                      "area_cm2": cost.area_cm2, "power_mw": cost.power_mw,
+                      "params": MLPTopology(ds.topology).n_params}
+    return rows
+
+
+if __name__ == "__main__":
+    run()

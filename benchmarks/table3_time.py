@@ -1,0 +1,49 @@
+"""Paper Table III analog: training execution-time comparison —
+gradient-only vs GA(accuracy-only) vs GA(AxC, both objectives).
+
+The paper reports minutes on an EPYC 7552 for ~26M chromosome evaluations;
+this container is 1 CPU core, so we report wall seconds at bench scale plus
+evaluations/second (the scale-free number; the island model multiplies it by
+the device count)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import GAConfig, GATrainer
+from repro.core.genome import MLPTopology
+from repro.data import DATASETS
+
+from .common import dataset, float_baseline, ga_run, emit_row, GA_POP, GA_GENS
+
+
+def run():
+    print("# Table III analog — training time "
+          "(name,us_per_call,grad_s|ga_acc_s|ga_axc_s|evals|evals_per_s)")
+    rows = {}
+    for name in DATASETS:
+        ds = dataset(name)
+        topo = MLPTopology(ds.topology)
+        _, grad_s = float_baseline(name)
+
+        # conventional GA: accuracy objective only, no hardware awareness
+        tr_acc = GATrainer(topo, ds.x_train, ds.y_train,
+                           GAConfig(pop_size=GA_POP, generations=GA_GENS,
+                                    acc_only=True))
+        t0 = time.time()
+        tr_acc.run()
+        ga_acc_s = time.time() - t0
+
+        _, _, ga_axc_s, evals = ga_run(name)
+        eps = evals / max(ga_axc_s, 1e-9)
+        emit_row(f"table3/{name}", ga_axc_s * 1e6,
+                 f"grad={grad_s:.1f}s|ga_acc={ga_acc_s:.1f}s|"
+                 f"ga_axc={ga_axc_s:.1f}s|evals={evals}|evals_per_s={eps:.0f}")
+        rows[name] = {"grad_s": grad_s, "ga_acc_s": ga_acc_s,
+                      "ga_axc_s": ga_axc_s, "evaluations": evals,
+                      "evals_per_s": eps}
+    return rows
+
+
+if __name__ == "__main__":
+    run()

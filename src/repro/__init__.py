@@ -1,0 +1,24 @@
+"""repro — production-grade JAX framework reproducing and extending
+"Embedding Hardware Approximations in Discrete Genetic-based Training for
+Printed MLPs" (Afentaki et al., 2024).
+
+Layout:
+  repro.core      — the paper's contribution: discrete genetic hardware-aware
+                    training (pow2 weights, bit-mask pruning, FA-count area
+                    model, NSGA-II), island-parallel over a device mesh.
+  repro.models    — LM-family model zoo (GQA/MLA attention, MoE, Mamba2 SSD,
+                    hybrid, VLM/audio backbones) used by the assigned
+                    architecture configs.
+  repro.configs   — one config per assigned architecture (+ the paper's MLPs).
+  repro.sharding  — logical-axis partitioning rules for the production mesh.
+  repro.runtime   — train/serve loops, fault tolerance, elastic re-sharding.
+  repro.optim     — optimizer stack (AdamW, schedules, accumulation).
+  repro.data      — synthetic tabular + token pipelines (offline container).
+  repro.checkpoint— sharded, atomic, reshardable checkpointing.
+  repro.kernels   — Pallas TPU kernels (pow2 matmul, population fitness,
+                    SSD scan) with jnp reference oracles.
+  repro.launch    — mesh construction, multi-pod dry-run, drivers.
+  repro.analysis  — roofline model from compiled HLO.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .roofline import (RooflineTerms, analyze_compiled, parse_collectives,
+                       V5E)

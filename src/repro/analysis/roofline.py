@@ -1,0 +1,193 @@
+"""Three-term roofline model from the compiled dry-run artifact (brief §ROOFLINE).
+
+    T_compute    = FLOPs_per_device    / peak_FLOPs
+    T_memory     = bytes_per_device    / HBM_bw
+    T_collective = coll_bytes_per_dev  / link_bw   (DCN-derated across pods)
+
+Per-device convention: ``compiled.cost_analysis()`` on a GSPMD-partitioned
+module reports the *per-device* program (the SPMD module is single-device
+code + collectives). We verified this by lowering the same matmul unsharded
+vs 16-way sharded: sharded FLOPs ≈ unsharded/16 (test_roofline.py). Collective
+bytes are parsed from the post-partition HLO text: operand bytes of each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async ``-start`` ops counted once, ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e hardware constants (brief §ROOFLINE)
+V5E = {
+    "peak_flops_bf16": 197e12,     # FLOP/s per chip
+    "hbm_bw": 819e9,               # B/s per chip
+    "ici_bw": 50e9,                # B/s per link
+    "dcn_derate": 0.5,             # pod-crossing collectives run on DCN
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# e.g.  bf16[2048,512]{1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    line: str
+    cross_pod: bool = False
+
+
+def parse_collectives(hlo_text: str, pod_size: int | None = None):
+    """Sum operand bytes of collective ops in a post-SPMD HLO module.
+
+    ``pod_size``: if given, a collective whose replica group spans device ids
+    from different pods (id // pod_size differs) is flagged cross_pod.
+    """
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "-done" in s or "fusion" in s.split("=")[0]:
+            continue
+        m = re.search(r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{} ]*?\b("
+                      + "|".join(_COLL_KINDS) + r")(?:-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand list inside the call parentheses
+        call = s[m.end(1):]
+        paren = call[call.index("("):]
+        # operands look like: f32[a,b]{...} %name — sum their shapes
+        nbytes = _shape_bytes(paren)
+        if nbytes == 0:
+            # some ops list operands without shapes; fall back to result type
+            lhs = s.split("=", 1)[1] if "=" in s else s
+            nbytes = _shape_bytes(lhs.split("(")[0])
+        cross = False
+        if pod_size:
+            rg = re.search(r"replica_groups=\{\{([0-9,]+)", s)
+            if rg:
+                ids = [int(x) for x in rg.group(1).split(",")]
+                cross = len({i // pod_size for i in ids}) > 1
+            else:
+                # iota format: replica_groups=[g,n]<=[N] or <=[a,b]T(…)
+                rg2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                                r"(T\(([0-9,]+)\))?", s)
+                if rg2:
+                    g, n = int(rg2.group(1)), int(rg2.group(2))
+                    dims = [int(x) for x in rg2.group(3).split(",")]
+                    # a transposed iota whose fastest-varying span exceeds a
+                    # pod, or group stride spanning pods ⇒ cross-pod
+                    cross = (n > 1 and rg2.group(4) is not None
+                             and dims[0] <= 2) or (g * n > pod_size and n > pod_size)
+        ops.append(CollectiveOp(kind, nbytes, s[:160], cross))
+    return ops
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    coll_bytes_ici: float         # per device
+    coll_bytes_dcn: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    collectives_by_kind: dict
+    model_flops: float = 0.0      # 6·N_active·D per device, if provided
+
+    @property
+    def bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["roofline_fraction_compute"] = (
+            self.t_compute / self.bound if self.bound else 0.0)
+        d["useful_flops_ratio"] = (
+            self.model_flops / self.flops if self.flops else 0.0)
+        return d
+
+
+def analyze_compiled(compiled, *, n_devices: int, pod_size: int | None = None,
+                     model_flops_global: float = 0.0,
+                     hw: dict = V5E) -> RooflineTerms:
+    """Derive the three roofline terms from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    ops = parse_collectives(hlo, pod_size=pod_size)
+    ici = sum(o.bytes for o in ops if not o.cross_pod)
+    dcn = sum(o.bytes for o in ops if o.cross_pod)
+    by_kind: dict[str, int] = {}
+    for o in ops:
+        by_kind[o.kind] = by_kind.get(o.kind, 0) + o.bytes
+
+    t_c = flops / hw["peak_flops_bf16"]
+    t_m = hbm / hw["hbm_bw"]
+    t_x = ici / hw["ici_bw"] + dcn / (hw["ici_bw"] * hw["dcn_derate"])
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, coll_bytes_ici=ici, coll_bytes_dcn=dcn,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+        collectives_by_kind=by_kind,
+        model_flops=model_flops_global / max(n_devices, 1),
+    )
+
+
+def extrapolate_depth(a: dict, b: dict, la: int, lb: int, lfull: int) -> dict:
+    """Linear depth-extrapolation of per-device cost metrics measured on two
+    unrolled lowerings of ``la`` and ``lb`` layers (layers are HLO-identical
+    ⇒ every metric is exactly affine in depth)."""
+    out = {}
+    for k in set(a) | set(b):
+        va, vb = a.get(k, 0.0), b.get(k, 0.0)
+        slope = (vb - va) / (lb - la)
+        out[k] = max(0.0, va + slope * (lfull - la))
+    return out
+
+
+def memory_analysis_dict(compiled) -> dict:
+    """memory_analysis() → plain dict (fields vary by backend/version)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # some backends do not implement it
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "host_argument_size_in_bytes",
+                  "peak_memory_in_bytes"):
+        if hasattr(ma, field):
+            out[field] = int(getattr(ma, field))
+    return out

@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, save_checkpoint, restore_checkpoint

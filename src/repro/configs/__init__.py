@@ -1,0 +1,12 @@
+from .base import ArchConfig, MoEConfig, SSMConfig, MLAConfig, SHAPES, ShapeSpec, cell_is_runnable
+from .registry import ARCHS
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return ARCHS[name[:-6]].smoke()
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,171 @@
+"""Architecture + run configuration for the assigned model zoo.
+
+Every assigned architecture gets one ``ArchConfig`` in its own module under
+``repro.configs``; reduced smoke variants are derived with ``.smoke()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    shared_expert_d_ff: int = 0     # 0 = no shared expert
+    every_k_layers: int = 1         # 1 = every layer is MoE; 2 = alternating
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256                # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                    # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int                       # dense FFN hidden (0 if none)
+    vocab_size: int
+    head_dim: int = 128
+    attn_type: str = "gqa"          # gqa | mla | none
+    ffn_act: str = "swiglu"         # swiglu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    pos_kind: str = "rope"          # rope | mrope | none
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    window: int = 0                 # sliding-window size; 0 = full attention
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    shared_attn_every: int = 0      # zamba2: shared attn block period (0 = off)
+    n_codebooks: int = 1            # musicgen: parallel codebook streams
+    n_img_tokens: int = 0           # qwen2-vl: stubbed patch-embed prefix len
+    # --- numerics / memory policy ---
+    param_dtype: Any = jnp.bfloat16
+    opt_state_dtype: Any = jnp.float32
+    remat: str = "full"             # full | none
+    scan_layers: bool = True        # False: unrolled (exact HLO cost accounting)
+    loss_chunk: int = 2048          # chunked cross-entropy (0 = disabled)
+    attn_block_q: int = 512         # blockwise-attention tile sizes
+    attn_block_k: int = 1024
+    causal_fold: bool = False       # folded-triangle causal schedule (§Perf)
+    attn_unroll: bool = False       # unroll attention scans (cost accounting)
+    kv_quant: str = "none"          # none | int8 (serve-time cache compression)
+    serve_tp_only: bool = False     # inference profile: no FSDP weight shard
+    use_pallas: bool = False        # TPU kernels (interpret-validated on CPU)
+    quant: str = "none"             # none | pow2 | int8 (paper technique at LM scale)
+    quant_storage: bool = False     # store dense weights as packed pow2 uint8
+    kv_cache_dtype: Any = jnp.bfloat16
+    # --- sub-quadratic capability (drives long_500k cell applicability) ---
+    subquadratic: bool = False
+
+    # ------------------------------------------------------------------
+    def vocab_padded(self, tp: int = 16) -> int:
+        return _round_up(self.vocab_size, 128 * tp // math.gcd(128, tp))
+
+    def heads_padded(self, tp: int = 16) -> int:
+        return _round_up(self.n_heads, tp) if self.n_heads else 0
+
+    def kv_heads_padded(self, tp: int = 16) -> int:
+        """KV heads replicate up to the TP degree when n_kv < tp (exact —
+        standard practice when TP exceeds the KV-head count)."""
+        if not self.n_kv_heads:
+            return 0
+        if self.n_kv_heads >= tp:
+            return _round_up(self.n_kv_heads, tp)
+        return tp
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=2,
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            moe=dataclasses.replace(self.moe, n_experts=4, d_ff=64,
+                                    capacity_factor=8.0,  # no drops in smoke
+                                    shared_expert_d_ff=64 if self.moe.shared_expert_d_ff else 0)
+            if self.moe else None,
+            ssm=dataclasses.replace(self.ssm, d_state=16, headdim=16, chunk=32)
+            if self.ssm else None,
+            mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16) if self.mla else None,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            mrope_sections=(2, 3, 3) if self.pos_kind == "mrope" else self.mrope_sections,
+            n_img_tokens=8 if self.n_img_tokens else 0,
+            loss_chunk=0,
+            attn_block_q=16,
+            attn_block_k=16,
+            remat="none",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to the LM family (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4 skip table)."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, (f"{cfg.name}: full quadratic attention at 524288 ctx — "
+                       "skipped per brief (sub-quadratic archs only)")
+    return True, ""

@@ -1,0 +1,5 @@
+"""--arch internlm2-1.8b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["internlm2-1.8b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""--arch llama4-maverick-400b-a17b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["llama4-maverick-400b-a17b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""--arch mamba2-130m (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["mamba2-130m"]
+SMOKE = CONFIG.smoke()

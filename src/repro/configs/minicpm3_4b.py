@@ -1,0 +1,5 @@
+"""--arch minicpm3-4b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["minicpm3-4b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""--arch mixtral-8x7b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["mixtral-8x7b"]
+SMOKE = CONFIG.smoke()

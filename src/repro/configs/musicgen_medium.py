@@ -1,0 +1,5 @@
+"""--arch musicgen-medium (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["musicgen-medium"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""--arch qwen2-vl-2b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen2-vl-2b"]
+SMOKE = CONFIG.smoke()

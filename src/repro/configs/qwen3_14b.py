@@ -1,0 +1,5 @@
+"""--arch qwen3-14b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen3-14b"]
+SMOKE = CONFIG.smoke()

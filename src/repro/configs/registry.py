@@ -1,0 +1,107 @@
+"""All assigned architectures (brief: ARCHITECTURES × SHAPES), exact configs.
+
+Each entry cites its source tier from the brief. Derived fields (padded
+vocab/heads) are computed in ArchConfig against the TP degree.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import ArchConfig, MoEConfig, SSMConfig, MLAConfig
+
+ARCHS: dict[str, ArchConfig] = {}
+
+
+def _reg(cfg: ArchConfig) -> ArchConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+# [hf:openbmb/MiniCPM3-4B; hf] — dense, MLA attention
+minicpm3_4b = _reg(ArchConfig(
+    name="minicpm3-4b", family="dense", n_layers=62, d_model=2560,
+    n_heads=40, n_kv_heads=40, d_ff=6400, vocab_size=73448,
+    attn_type="mla", ffn_act="swiglu", head_dim=96,
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                  qk_rope_dim=32, v_head_dim=64),
+))
+
+# [arXiv:2402.19173; hf] — GQA (2 KV heads), RoPE, GELU MLP
+starcoder2_3b = _reg(ArchConfig(
+    name="starcoder2-3b", family="dense", n_layers=30, d_model=3072,
+    n_heads=24, n_kv_heads=2, d_ff=12288, vocab_size=49152,
+    attn_type="gqa", ffn_act="gelu", head_dim=128, rope_theta=1e5,
+))
+
+# [hf:Qwen/Qwen3-8B; hf] — qk-norm, GQA
+qwen3_14b = _reg(ArchConfig(
+    name="qwen3-14b", family="dense", n_layers=40, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_ff=17408, vocab_size=151936,
+    attn_type="gqa", ffn_act="swiglu", head_dim=128, qk_norm=True,
+))
+
+# [arXiv:2403.17297; hf] — GQA
+internlm2_1_8b = _reg(ArchConfig(
+    name="internlm2-1.8b", family="dense", n_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=8, d_ff=8192, vocab_size=92544,
+    attn_type="gqa", ffn_act="swiglu", head_dim=128,
+))
+
+# [hf:meta-llama/Llama-4-Scout-17B-16E; unverified] — MoE 128e top-1,
+# alternating dense/MoE + shared expert (≈400B total / ≈17B active).
+# fp32 Adam moments for 400B exceed single-pod HBM → bf16 moments
+# (DESIGN.md §5).
+llama4_maverick = _reg(ArchConfig(
+    name="llama4-maverick-400b-a17b", family="moe", n_layers=48, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_ff=8192, vocab_size=202048,
+    attn_type="gqa", ffn_act="swiglu", head_dim=128,
+    moe=MoEConfig(n_experts=128, top_k=1, d_ff=8192,
+                  shared_expert_d_ff=8192, every_k_layers=2),
+    opt_state_dtype=jnp.bfloat16,
+))
+
+# [arXiv:2401.04088; hf] — 8 experts top-2, sliding-window 4096
+mixtral_8x7b = _reg(ArchConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=32000,
+    attn_type="gqa", ffn_act="swiglu", head_dim=128, window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=14336, every_k_layers=1),
+    subquadratic=True,   # SWA: bounded KV → long_500k runs (DESIGN.md §4)
+))
+
+# [arXiv:2411.15242; hf] — Mamba2 backbone + shared attention block
+zamba2_1_2b = _reg(ArchConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32000,
+    attn_type="none", ffn_act="swiglu", head_dim=64,
+    ssm=SSMConfig(d_state=64, expand=2, headdim=64),
+    shared_attn_every=6,
+    subquadratic=True,
+))
+
+# [arXiv:2405.21060; unverified] — pure SSD, tied embeddings
+mamba2_130m = _reg(ArchConfig(
+    name="mamba2-130m", family="ssm", n_layers=24, d_model=768,
+    n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=50280,
+    attn_type="none", head_dim=0,
+    ssm=SSMConfig(d_state=128, expand=2, headdim=64),
+    tie_embeddings=True,
+    subquadratic=True,
+))
+
+# [arXiv:2409.12191; hf] — M-RoPE, stubbed vision frontend (precomputed
+# patch embeddings per the brief)
+qwen2_vl_2b = _reg(ArchConfig(
+    name="qwen2-vl-2b", family="vlm", n_layers=28, d_model=1536,
+    n_heads=12, n_kv_heads=2, d_ff=8960, vocab_size=151936,
+    attn_type="gqa", ffn_act="swiglu", head_dim=128,
+    pos_kind="mrope", mrope_sections=(16, 24, 24), n_img_tokens=256,
+))
+
+# [arXiv:2306.05284; hf] — decoder-only over 4 EnCodec codebooks (frontend
+# stubbed); RoPE substitutes the learned sinusoidal embedding (DESIGN.md §4)
+musicgen_medium = _reg(ArchConfig(
+    name="musicgen-medium", family="audio", n_layers=48, d_model=1536,
+    n_heads=24, n_kv_heads=24, d_ff=6144, vocab_size=2048,
+    attn_type="gqa", ffn_act="gelu", head_dim=64, n_codebooks=4,
+))

@@ -1,0 +1,5 @@
+"""--arch starcoder2-3b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["starcoder2-3b"]
+SMOKE = CONFIG.smoke()

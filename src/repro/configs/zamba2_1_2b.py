@@ -1,0 +1,5 @@
+"""--arch zamba2-1.2b (see registry.py for the full definition)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["zamba2-1.2b"]
+SMOKE = CONFIG.smoke()

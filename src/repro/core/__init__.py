@@ -1,0 +1,16 @@
+"""The paper's primary contribution: discrete genetic-based hardware-aware
+training for printed MLPs (pow2 weights, bit-mask pruning, FA-count area,
+NSGA-II), plus the generalized hardware-approximation search used by the
+LM-scale architectures.
+"""
+from .genome import MLPTopology, GenomeSpec
+from .trainer import GAConfig, GATrainer, GAState
+from .area import (mlp_fa_count, population_area, baseline_mlp_fa,
+                   HardwareCost, EGFET_FA_AREA_CM2, EGFET_FA_POWER_MW)
+from .mlp import mlp_forward, mlp_predict, accuracy, population_accuracy
+from .quantize import (quantize_inputs, qrelu, pow2_quantize, pow2_dequantize,
+                       int8_quantize, int8_dequantize)
+from .pareto import pareto_front, hypervolume_2d, best_within_loss
+from .baselines import (train_float_mlp, exact_bespoke_baseline, calibrated_seeds,
+                        post_training_approx, FloatMLP, BespokeBaseline)
+from .hdl import emit_verilog, evaluate_genome_python

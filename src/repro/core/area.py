@@ -1,0 +1,147 @@
+"""FA-count hardware-cost model (paper §III-C, Eq. (2)).
+
+Area(θ) = Σ_{l,j} AdderArea(θ_j^{(l)}) where AdderArea counts the Full Adders
+needed to reduce the neuron's multi-operand addition: the non-zero bits of
+every (masked, shifted) summand are histogrammed per column, then reduced
+3:2 (each FA eats 3 bits in column c, emits 1 in c and a carry in c+1) until
+every column holds ≤ 2 bits, plus the final carry-propagate row.
+
+Everything is pure ``jnp`` so it vmaps over neurons *and* over GA populations
+and runs inside the jitted fitness function — the paper's "Python function"
+made trace-compatible.
+
+The exact bespoke baseline (Table I analog) uses the same column machinery
+with array multipliers ((Bw−1)·Bx FAs each) feeding full-width products.
+
+EGFET calibration constants convert FA counts into cm² / mW so that numbers
+land in the paper's reported ranges; every EXPERIMENTS.md comparison is a
+ratio, which is calibration-free (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .genome import GenomeSpec
+
+# --- EGFET calibration (see DESIGN.md: constants only set absolute scale) ---
+EGFET_FA_AREA_CM2 = 0.008   # cm² per full adder
+EGFET_FA_POWER_MW = 0.027   # mW  per full adder (1 V)
+EGFET_POWER_SCALE_06V = 0.36  # P ∝ V²: (0.6/1.0)² — §V-C re-synthesis at 0.6 V
+
+_N_COLS = 32          # column budget: in_bits(≤8) + max shift(6) + log2 fan-in + carries
+_REDUCE_ROUNDS = 16   # ≥ log_{3/2}(max column height); 16 covers height ≤ 2^9
+
+
+def _column_histogram(masks, exps, bias, bshift, in_bits: int) -> jnp.ndarray:
+    """Non-zero bit count per adder column for one neuron.
+
+    masks, exps: (fan_in,) int32 — summand i contributes bit j of its mask at
+    column j + k_i. bias contributes the set bits of its two's-complement
+    representation shifted by ``bshift`` (constants are hardwired but still
+    occupy adder slots until merged; counting them is the conservative choice
+    and matches the paper's 'calculates the non-zero bits in each column').
+    """
+    cols = jnp.zeros((_N_COLS,), jnp.int32)
+    j = jnp.arange(in_bits)
+    bits = (masks[:, None] >> j[None, :]) & 1                    # (fan_in, in_bits)
+    col_idx = j[None, :] + exps[:, None]                          # (fan_in, in_bits)
+    onehot = jax.nn.one_hot(col_idx, _N_COLS, dtype=jnp.int32)    # (fi, ib, C)
+    cols = cols + jnp.sum(bits[..., None] * onehot, axis=(0, 1))
+    # bias: a hardwired constant; its |magnitude| bits occupy adder slots at
+    # columns [bshift, bshift + bias_bits) (adding vs. subtracting a constant
+    # costs the same row — signs are free, §III-A).
+    bmag = jnp.abs(bias).astype(jnp.int32)
+    c = jnp.arange(_N_COLS)
+    shift_amt = jnp.clip(c - bshift, 0, 30)
+    bbits = (bmag >> shift_amt) & 1
+    bbits = jnp.where(c >= bshift, bbits, 0)
+    return cols + bbits
+
+
+def _reduce_columns(cols: jnp.ndarray):
+    """3:2 reduction until all columns ≤ 2 high; returns (n_FA, final cols)."""
+
+    def body(_, carry):
+        cols, total = carry
+        fa = cols // 3
+        rem = cols - 2 * fa                      # 3 eaten, 1 sum bit stays
+        carries = jnp.concatenate([jnp.zeros((1,), jnp.int32), fa[:-1]])
+        return rem + carries, total + jnp.sum(fa)
+
+    cols, n_fa = jax.lax.fori_loop(0, _REDUCE_ROUNDS, body, (cols, jnp.int32(0)))
+    # Final two-row carry-propagate adder: one FA per column still ≥ 2 high
+    # ("only FAs are assumed for the reduction", §III-C).
+    cpa = jnp.sum((cols >= 2).astype(jnp.int32))
+    return n_fa + cpa, cols
+
+
+def neuron_fa_count(masks, signs, exps, bias, bshift, in_bits: int) -> jnp.ndarray:
+    """AdderArea(θ_j^{(l)}) in FAs. ``signs`` only gates empty summands:
+    a summand with mask 0 vanishes entirely (paper: zero mask ≡ pruned)."""
+    del signs  # negation = NOT gates + constant folding → free (paper §III-A)
+    cols = _column_histogram(masks, exps, bias, bshift, in_bits)
+    n_fa, _ = _reduce_columns(cols)
+    return n_fa
+
+
+def mlp_fa_count(spec: GenomeSpec, genome: jnp.ndarray) -> jnp.ndarray:
+    """Total FA count of one chromosome (Eq. (2)). vmap for populations."""
+    total = jnp.int32(0)
+    for l, sl in enumerate(spec.layers):
+        masks, signs, exps, bias, bshift, _ = spec.layer_params(genome, l)
+        per_neuron = jax.vmap(
+            lambda m, s, k, b: neuron_fa_count(m, s, k, b, bshift, sl.in_bits),
+            in_axes=(1, 1, 1, 0),
+        )(masks, signs, exps, bias)
+        total = total + jnp.sum(per_neuron)
+    return total
+
+
+def population_area(spec: GenomeSpec, pop: jnp.ndarray) -> jnp.ndarray:
+    """FA counts for a population (P, n_genes) → (P,)."""
+    return jax.vmap(lambda g: mlp_fa_count(spec, g))(pop)
+
+
+# ---------------------------------------------------------------------------
+# Exact bespoke baseline cost model (Table I analog)
+# ---------------------------------------------------------------------------
+
+def _multiplier_fa(weight_bits: int, act_bits: int) -> int:
+    """Array multiplier: (Bw−1)·Bx FAs (Weste & Harris, as cited in §III-C)."""
+    return (weight_bits - 1) * act_bits
+
+
+def baseline_layer_fa(fan_in: int, fan_out: int, weight_bits: int, act_bits: int) -> int:
+    """Exact bespoke layer: fan_out × (fan_in multipliers + product adder tree)."""
+    mult = fan_in * _multiplier_fa(weight_bits, act_bits)
+    prod_bits = weight_bits + act_bits
+    cols = jnp.zeros((_N_COLS,), jnp.int32)
+    cols = cols.at[:prod_bits].set(fan_in)     # all product bits present
+    cols = cols.at[:weight_bits].add(1)        # bias row
+    tree, _ = _reduce_columns(cols)
+    return fan_out * (mult + int(tree))
+
+
+def baseline_mlp_fa(sizes, weight_bits: int = 8, input_bits: int = 4,
+                    act_bits: int = 8) -> int:
+    """FA count of the exact bespoke MLP (8-bit fixed weights, §V-A)."""
+    total = 0
+    for l in range(len(sizes) - 1):
+        b_in = input_bits if l == 0 else act_bits
+        total += baseline_layer_fa(sizes[l], sizes[l + 1], weight_bits, b_in)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareCost:
+    fa_count: int
+    area_cm2: float
+    power_mw: float
+
+    @staticmethod
+    def from_fa(fa: int, voltage: float = 1.0) -> "HardwareCost":
+        p = fa * EGFET_FA_POWER_MW * (voltage / 1.0) ** 2
+        return HardwareCost(int(fa), fa * EGFET_FA_AREA_CM2, float(p))

@@ -1,0 +1,190 @@
+"""Chromosome encoding for the approximate printed MLP (paper Fig. 3).
+
+A chromosome is a flat ``int32`` vector. Genes are grouped per weight
+(mask ``m``, sign ``s``, exponent ``k``), then per neuron (bias ``b``),
+then per layer (output right-shift ``r`` and bias shift — see DESIGN.md
+"Assumption changes"), then by layer — exactly the grouping of paper Fig. 3.
+
+Gene semantics (paper §III / Eq. (4)):
+  mask  m_{i,j}^{(l)} ∈ [0, 2^{B_in(l)})  — bitwise-AND pruning mask on the
+                                            input activation (B_in bits).
+  sign  s_{i,j}^{(l)} ∈ {0, 1}            — encodes {−1, +1}.
+  exp   k_{i,j}^{(l)} ∈ [0, n−1)          — pow2 weight exponent (Eq. (1)).
+  bias  b_j^{(l)}     ∈ [−2^{Bb−1}, 2^{Bb−1})  — low-bitwidth quantized bias.
+  bshift β^{(l)}      ∈ [0, n−1)          — shared bias scale (constant folding
+                                            into the adder tree is free).
+  rshift r^{(l)}      ∈ [0, 8)            — free LSB-drop on the QReLU input
+                                            (wiring only; searchable rescale).
+
+Everything is specified by :class:`GenomeSpec`, which owns per-gene integer
+bounds ``low``/``high`` (inclusive / exclusive) so that mutation and random
+initialisation are single vectorised ``randint`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPTopology:
+    """(n_in, h_1, ..., n_out) with the paper's bitwidths."""
+
+    sizes: tuple[int, ...]
+    input_bits: int = 4      # paper: 4-bit inputs
+    act_bits: int = 8        # paper: 8-bit QReLU outputs
+    weight_bits: int = 8     # n in Eq. (1): k ∈ [0, n-1)
+    bias_bits: int = 8       # low-bitwidth quantized biases
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def n_params(self) -> int:
+        """Weight + bias count (the paper's 'Parameters' column, Table I)."""
+        return sum(
+            self.sizes[l] * self.sizes[l + 1] + self.sizes[l + 1]
+            for l in range(self.n_layers)
+        )
+
+    def layer_in_bits(self, l: int) -> int:
+        return self.input_bits if l == 0 else self.act_bits
+
+    @property
+    def max_exp(self) -> int:
+        return self.weight_bits - 2  # k ∈ [0, n-1)  →  {0, ..., n-2}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSlices:
+    """Index ranges of each gene family inside the flat chromosome."""
+
+    masks: slice     # fan_in * fan_out genes
+    signs: slice
+    exps: slice
+    biases: slice    # fan_out genes
+    bshift: slice    # 1 gene
+    rshift: slice    # 1 gene
+    fan_in: int
+    fan_out: int
+    in_bits: int
+
+
+class GenomeSpec:
+    """Flat-vector layout + integer bounds for a topology's chromosome."""
+
+    def __init__(self, topo: MLPTopology):
+        self.topo = topo
+        self.layers: list[LayerSlices] = []
+        low: list[np.ndarray] = []
+        high: list[np.ndarray] = []
+        off = 0
+
+        for l in range(topo.n_layers):
+            fi, fo = topo.sizes[l], topo.sizes[l + 1]
+            ib = topo.layer_in_bits(l)
+            nw = fi * fo
+
+            def seg(n: int, lo: int, hi: int):
+                nonlocal off
+                s = slice(off, off + n)
+                low.append(np.full(n, lo, np.int32))
+                high.append(np.full(n, hi, np.int32))
+                off += n
+                return s
+
+            masks = seg(nw, 0, 2**ib)
+            signs = seg(nw, 0, 2)
+            exps = seg(nw, 0, topo.max_exp + 1)
+            biases = seg(fo, -(2 ** (topo.bias_bits - 1)), 2 ** (topo.bias_bits - 1))
+            bshift = seg(1, 0, topo.max_exp + 1)
+            rshift = seg(1, 0, 8)
+            self.layers.append(
+                LayerSlices(masks, signs, exps, biases, bshift, rshift, fi, fo, ib)
+            )
+
+        self.n_genes = off
+        self.low = jnp.asarray(np.concatenate(low))
+        self.high = jnp.asarray(np.concatenate(high))
+        # Mask genes get bit-flip mutation; others get random reset.
+        is_mask = np.zeros(off, bool)
+        mask_bits = np.zeros(off, np.int32)
+        for sl in self.layers:
+            is_mask[sl.masks] = True
+            mask_bits[sl.masks] = sl.in_bits
+        self.is_mask = jnp.asarray(is_mask)
+        self.mask_bits = jnp.asarray(mask_bits)
+
+    # -- structured views -------------------------------------------------
+    def layer_params(self, genome: jnp.ndarray, l: int):
+        """Return (masks[fi,fo], signs[fi,fo], exps[fi,fo], bias[fo], bshift, rshift).
+
+        Works on a single genome (1-D) or a population (…, n_genes): the gene
+        axis is always the last one.
+        """
+        sl = self.layers[l]
+        lead = genome.shape[:-1]
+
+        def take(s: slice, shape):
+            return genome[..., s].reshape(lead + shape)
+
+        masks = take(sl.masks, (sl.fan_in, sl.fan_out))
+        signs = take(sl.signs, (sl.fan_in, sl.fan_out)) * 2 - 1   # {0,1} → {-1,+1}
+        exps = take(sl.exps, (sl.fan_in, sl.fan_out))
+        bias = take(sl.biases, (sl.fan_out,))
+        bshift = genome[..., sl.bshift.start]
+        rshift = genome[..., sl.rshift.start]
+        return masks, signs, exps, bias, bshift, rshift
+
+    def random(self, key, n: int) -> jnp.ndarray:
+        """Uniform random population of ``n`` chromosomes within bounds."""
+        import jax
+
+        u = jax.random.uniform(key, (n, self.n_genes))
+        lo = self.low.astype(jnp.float32)
+        hi = self.high.astype(jnp.float32)
+        return jnp.floor(lo + u * (hi - lo)).astype(jnp.int32)
+
+    def clip(self, genome: jnp.ndarray) -> jnp.ndarray:
+        return jnp.clip(genome, self.low, self.high - 1)
+
+    def exact_seed(
+        self,
+        weights: Sequence[np.ndarray],
+        biases: Sequence[np.ndarray],
+    ) -> np.ndarray:
+        """Encode float weights as a 'nearly non-approximate' chromosome.
+
+        Used to dope ~10 % of the initial population (paper §IV-A): full
+        masks, signs/exponents from a pow2 rounding of the float weights,
+        quantized biases. Scales are chosen per layer so the median weight
+        magnitude maps near the middle of the exponent range.
+        """
+        topo = self.topo
+        g = np.zeros(self.n_genes, np.int32)
+        for l, sl in enumerate(self.layers):
+            w = np.asarray(weights[l], np.float64)        # (fan_in, fan_out)
+            b = np.asarray(biases[l], np.float64)         # (fan_out,)
+            absw = np.abs(w[w != 0])
+            med = np.median(absw) if absw.size else 1.0
+            # target: median |w| → exponent 2 (leaves headroom both ways)
+            scale = (2.0**2) / max(med, 1e-12)
+            k = np.clip(np.round(np.log2(np.maximum(np.abs(w) * scale, 1e-12))),
+                        0, topo.max_exp).astype(np.int32)
+            s = (w >= 0).astype(np.int32)
+            m = np.full(w.shape, 2**sl.in_bits - 1, np.int32)   # keep all bits
+            bq = np.clip(np.round(b * scale * (2**sl.in_bits - 1)),
+                         -(2 ** (topo.bias_bits - 1)),
+                         2 ** (topo.bias_bits - 1) - 1).astype(np.int32)
+            g[sl.masks] = m.reshape(-1)
+            g[sl.signs] = s.reshape(-1)
+            g[sl.exps] = k.reshape(-1)
+            g[sl.biases] = bq
+            g[sl.bshift.start] = 0
+            # QReLU rescale ≈ log2(scale * input_range) to undo the blow-up
+            g[sl.rshift.start] = int(np.clip(np.round(np.log2(scale * 15)), 0, 7))
+        return g

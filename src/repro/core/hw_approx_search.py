@@ -1,0 +1,141 @@
+"""The paper's Eq. (3) at LM scale: NSGA-II over per-tensor discrete
+hardware-approximation genes (DESIGN.md §4 "Search-level").
+
+Search space per quantizable weight tensor:
+    0 = bf16 (exact, 2 B/param)
+    1 = int8 (per-channel symmetric, 1 B/param)
+    2 = pow2 (sign+exponent byte — the paper's multiplier-less format,
+        1 B/param, shift-only arithmetic / `pow2_matmul` kernel on TPU)
+
+Objectives (minimized), mirroring [error, area] of the printed MLPs:
+    f1 = eval loss of the transformed model on a probe batch
+    f2 = weight bytes moved per forward (the dominant roofline term for
+         every assigned arch per the dry-run — EXPERIMENTS.md §Roofline)
+
+The same constrained NSGA-II machinery as the printed-MLP trainer
+(repro.core.nsga2) drives the search; evaluation is sequential per genome
+(full-model evals don't vmap) and cheap at smoke scale, pod-parallel at
+production scale via the island model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .nsga2 import evaluate_ranking, survivor_select, tournament_select
+from .pareto import pareto_front
+from .quantize import (pow2_quantize, pow2_dequantize, int8_quantize,
+                       int8_dequantize)
+
+FORMATS = ("bf16", "int8", "pow2")
+_BYTES = {0: 2.0, 1: 1.0, 2: 1.0}
+
+
+def _quantizable_paths(params):
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            out.append(path)
+    return out
+
+
+def _apply_format(w, fmt: int):
+    if fmt == 1:
+        q, s = int8_quantize(w)
+        return int8_dequantize(q, s, w.dtype)
+    if fmt == 2:
+        return pow2_dequantize(pow2_quantize(w), w.dtype)
+    return w
+
+
+@dataclasses.dataclass
+class LMApproxSearch:
+    """NSGA-II search over per-tensor formats for any zoo model."""
+
+    model: object                  # repro.models.Model
+    params: dict
+    batch: dict
+    pop_size: int = 32
+    pc: float = 0.7
+    pm: float = 0.1
+    max_loss_increase: float = 0.5   # feasibility bound vs exact loss (nats)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.paths = _quantizable_paths(self.params)
+        self.n_genes = len(self.paths)
+        leaves = jax.tree_util.tree_flatten_with_path(self.params)[0]
+        self.sizes = {tuple(p): float(np.prod(l.shape)) for p, l in leaves}
+        self.exact_loss = float(self.model.loss_fn(self.params, self.batch)[0])
+        self._eval_cache: dict[bytes, float] = {}
+
+    # -- genome application -------------------------------------------------
+    def transform(self, genome: np.ndarray):
+        fmt = {tuple(p): int(g) for p, g in zip(self.paths, genome)}
+
+        def one(path, leaf):
+            f = fmt.get(tuple(path))
+            return _apply_format(leaf, f) if f else leaf
+
+        return jax.tree_util.tree_map_with_path(one, self.params)
+
+    # -- objectives ----------------------------------------------------------
+    def loss_of(self, genome: np.ndarray) -> float:
+        key = genome.tobytes()
+        if key not in self._eval_cache:
+            p = self.transform(genome)
+            self._eval_cache[key] = float(self.model.loss_fn(p, self.batch)[0])
+        return self._eval_cache[key]
+
+    def bytes_of(self, genome: np.ndarray) -> float:
+        total = 0.0
+        for path, g in zip(self.paths, genome):
+            total += self.sizes[tuple(path)] * _BYTES[int(g)]
+        # non-searched leaves stay bf16
+        rest = sum(s for p, s in self.sizes.items()
+                   if p not in {tuple(q) for q in self.paths})
+        return total + 2.0 * rest
+
+    def evaluate(self, pop: np.ndarray):
+        obj = np.zeros((len(pop), 2))
+        for i, g in enumerate(pop):
+            obj[i, 0] = self.loss_of(g)
+            obj[i, 1] = self.bytes_of(g)
+        viol = np.maximum(
+            0.0, obj[:, 0] - (self.exact_loss + self.max_loss_increase))
+        return obj, viol
+
+    # -- GA loop --------------------------------------------------------------
+    def run(self, generations: int = 10):
+        rng = np.random.default_rng(self.seed)
+        pop = rng.integers(0, len(FORMATS), (self.pop_size, self.n_genes))
+        pop[0] = 0                                   # dope: exact individual
+        pop[1] = 2                                   # dope: all-pow2
+        for _ in range(generations):
+            obj, viol = self.evaluate(pop)
+            rank, crowd = evaluate_ranking(jnp.asarray(obj), jnp.asarray(viol))
+            parents = np.asarray(tournament_select(
+                jax.random.PRNGKey(rng.integers(2**31)),
+                rank, crowd, self.pop_size))
+            pa, pb = pop[parents[::2]], pop[parents[1::2]]
+            cross = rng.random((len(pa), self.n_genes)) < 0.5
+            kids = np.concatenate([np.where(cross, pb, pa),
+                                   np.where(cross, pa, pb)])
+            mut = rng.random(kids.shape) < self.pm
+            kids = np.where(mut, rng.integers(0, len(FORMATS), kids.shape),
+                            kids)
+            both = np.concatenate([pop, kids])
+            obj2, viol2 = self.evaluate(both)
+            rank2, crowd2 = evaluate_ranking(jnp.asarray(obj2),
+                                             jnp.asarray(viol2))
+            keep = np.asarray(survivor_select(rank2, crowd2, self.pop_size))
+            pop = both[keep]
+        obj, viol = self.evaluate(pop)
+        front = pareto_front(obj, extras={"genomes": pop})
+        front["exact_loss"] = self.exact_loss
+        front["formats"] = FORMATS
+        return front

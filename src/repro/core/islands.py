@@ -1,0 +1,142 @@
+"""Island-parallel NSGA-II over the device mesh (DESIGN.md §3/§5).
+
+The paper runs ~26 M chromosome evaluations on one EPYC socket; the GA is
+embarrassingly parallel, so at pod scale we shard the population into one
+island per device along the ``data`` (and ``pod``) mesh axes with
+``shard_map``:
+
+  * each island runs the full NSGA-II generation locally (no collectives),
+  * every ``migrate_every`` generations the best ``n_migrants`` chromosomes
+    hop to the next island on a ring (``lax.ppermute``) and replace the
+    locals' worst,
+  * the final global Pareto front is an ``all_gather`` + host-side peel.
+
+The same code runs on 1 CPU device (degenerate ring) and on the 512-device
+dry-run mesh; ``launch/dryrun.py`` lowers it for the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .genome import GenomeSpec, MLPTopology
+from .quantize import quantize_inputs
+from .mlp import population_accuracy
+from .area import population_area
+from .nsga2 import evaluate_ranking, survivor_select
+from .operators import make_offspring
+from .pareto import pareto_front
+from .trainer import GAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandConfig:
+    ga: GAConfig = GAConfig()
+    island_pop: int = 64          # per-device population
+    migrate_every: int = 10
+    n_migrants: int = 4
+    rounds: int = 10              # migration rounds; total gens = rounds × migrate_every
+
+
+def _local_generation(spec: GenomeSpec, cfg: GAConfig, fitness, carry, _):
+    pop, obj, viol, rank, crowd, key = carry
+    key, k_off = jax.random.split(key)
+    children = make_offspring(k_off, pop, rank, crowd, spec,
+                              cfg.crossover_rate, cfg.mutation_rate_gene)
+    c_obj, c_viol = fitness(children)
+    pop_a = jnp.concatenate([pop, children], axis=0)
+    obj_a = jnp.concatenate([obj, c_obj], axis=0)
+    viol_a = jnp.concatenate([viol, c_viol], axis=0)
+    r, c = evaluate_ranking(obj_a, viol_a)
+    keep = survivor_select(r, c, pop.shape[0])
+    pop, obj, viol = pop_a[keep], obj_a[keep], viol_a[keep]
+    rank, crowd = evaluate_ranking(obj, viol)
+    return (pop, obj, viol, rank, crowd, key), None
+
+
+def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
+                      x_int, labels, baseline_acc: float,
+                      axis_names: tuple[str, ...] = ("data",)):
+    """Returns (init_fn, round_fn) running one migration round per call.
+
+    The population lives as a global array (n_devices × island_pop, genes)
+    sharded along its first axis over ``axis_names``.
+    """
+    ga = cfg.ga
+
+    def fitness(pop):
+        acc = population_accuracy(spec, pop, x_int, labels)
+        area = population_area(spec, pop).astype(jnp.float32)
+        obj = jnp.stack([1.0 - acc, area], axis=-1)
+        viol = jnp.maximum(0.0, (baseline_acc - acc) - ga.max_acc_loss)
+        return obj, viol
+
+    gen = partial(_local_generation, spec, ga, fitness)
+    n_axis = int(np.prod([mesh.shape[a] for a in axis_names]))
+
+    def island_round(pop, key):
+        """Local shard view: pop (island_pop, genes), key (1, 2) uint32
+        (the leading shard axis stays — strip it for jax.random)."""
+        key = key[0]
+        obj, viol = fitness(pop)
+        rank, crowd = evaluate_ranking(obj, viol)
+        carry = (pop, obj, viol, rank, crowd, key)
+        carry, _ = jax.lax.scan(gen, carry, None, length=cfg.migrate_every)
+        pop, obj, viol, rank, crowd, key = carry
+
+        # --- ring migration: send my best n_migrants to the next island ---
+        order = jnp.lexsort((-crowd, rank))
+        best = pop[order[: cfg.n_migrants]]
+        axis = axis_names[-1]
+        perm = [(i, (i + 1) % mesh.shape[axis]) for i in range(mesh.shape[axis])]
+        incoming = jax.lax.ppermute(best, axis, perm)
+        if len(axis_names) > 1:   # cross-pod ring on the slower axis too
+            perm0 = [(i, (i + 1) % mesh.shape[axis_names[0]])
+                     for i in range(mesh.shape[axis_names[0]])]
+            incoming = jax.lax.ppermute(incoming, axis_names[0], perm0)
+        pop = pop.at[order[-cfg.n_migrants:]].set(incoming)
+        return pop, key[None]
+
+    pspec = P(axis_names)
+    sharded_round = shard_map(
+        island_round, mesh=mesh,
+        in_specs=(pspec, pspec),
+        out_specs=(pspec, pspec),
+        check_rep=False,
+    )
+
+    def init(seed: int):
+        key = jax.random.PRNGKey(seed)
+        k_pop, k_isl = jax.random.split(key)
+        pop = spec.random(k_pop, n_axis * cfg.island_pop)
+        keys = jax.random.split(k_isl, n_axis)
+        return pop, keys
+
+    return init, jax.jit(sharded_round)
+
+
+def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,
+                cfg: IslandConfig = IslandConfig(), baseline_acc: float = 1.0,
+                axis_names: tuple[str, ...] = ("data",), seed: int = 0):
+    """Drive ``rounds`` migration rounds and return the global Pareto front."""
+    spec = GenomeSpec(topo)
+    x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
+    labels = jnp.asarray(labels, jnp.int32)
+    init, round_fn = build_island_step(spec, cfg, mesh, x_int, labels,
+                                       baseline_acc, axis_names)
+    pop, keys = init(seed)
+    for _ in range(cfg.rounds):
+        pop, keys = round_fn(pop, keys)
+    pop = np.asarray(jax.device_get(pop))
+
+    # global Pareto peel on host
+    acc = population_accuracy(spec, jnp.asarray(pop), x_int, labels)
+    area = population_area(spec, jnp.asarray(pop))
+    obj = np.stack([1.0 - np.asarray(acc), np.asarray(area, np.float64)], axis=-1)
+    return pareto_front(obj, extras={"genomes": pop}), spec

@@ -1,0 +1,83 @@
+"""Integer forward pass of the approximate printed MLP — paper Eq. (4):
+
+    y_j = QReLU( Σ_i s_ij · ((m_ij ⊙ x_i) ≪ k_ij) + b_j )
+
+All arithmetic is int32 (bit-exact w.r.t. the bespoke circuit semantics up to
+the accumulator width, which never exceeds 2^23 for the paper's topologies).
+The last layer omits QReLU — classification is argmax over raw accumulators.
+
+``population_*`` variants vmap over a population axis; they are the fitness
+hot loop and have a Pallas kernel twin in ``repro.kernels.pop_mlp``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .genome import GenomeSpec
+from .quantize import qrelu, quantize_inputs
+
+
+def _layer_forward(x, masks, signs, exps, bias, bshift, rshift, out_bits: int,
+                   is_last: bool):
+    """x: (..., fan_in) int32 → (..., fan_out) int32."""
+    # (…, fan_in, 1) AND (fan_in, fan_out) → (…, fan_in, fan_out)
+    masked = jnp.bitwise_and(x[..., :, None], masks)
+    shifted = jnp.left_shift(masked, exps)
+    acc = jnp.sum(signs * shifted, axis=-2) + jnp.left_shift(bias, bshift)
+    if is_last:
+        return acc
+    return qrelu(acc, rshift, out_bits)
+
+
+def mlp_forward(spec: GenomeSpec, genome: jnp.ndarray, x_int: jnp.ndarray) -> jnp.ndarray:
+    """Single-chromosome forward. x_int: (batch, n_in) int32 → (batch, n_out)."""
+    h = x_int
+    n = spec.topo.n_layers
+    for l in range(n):
+        masks, signs, exps, bias, bshift, rshift = spec.layer_params(genome, l)
+        h = _layer_forward(h, masks, signs, exps, bias, bshift, rshift,
+                           spec.topo.act_bits, is_last=(l == n - 1))
+    return h
+
+
+def mlp_predict(spec: GenomeSpec, genome: jnp.ndarray, x01: jnp.ndarray) -> jnp.ndarray:
+    """Float [0,1] features → class predictions."""
+    x_int = quantize_inputs(x01, spec.topo.input_bits)
+    return jnp.argmax(mlp_forward(spec, genome, x_int), axis=-1)
+
+
+def accuracy(spec: GenomeSpec, genome: jnp.ndarray, x01, labels) -> jnp.ndarray:
+    return jnp.mean((mlp_predict(spec, genome, x01) == labels).astype(jnp.float32))
+
+
+def population_accuracy(spec: GenomeSpec, pop: jnp.ndarray, x_int, labels) -> jnp.ndarray:
+    """(P, n_genes) × (S, n_in) → (P,) accuracy. Inputs pre-quantized so the
+    quantization is hoisted out of the population vmap."""
+
+    def one(g):
+        pred = jnp.argmax(mlp_forward(spec, g, x_int), axis=-1)
+        return jnp.mean((pred == labels).astype(jnp.float32))
+
+    return jax.vmap(one)(pop)
+
+
+# ---------------------------------------------------------------------------
+# Exact fixed-point baseline inference (Table I semantics: 8-bit weights,
+# 4-bit inputs, integer multipliers) — used for the baseline accuracy and by
+# the post-training approximation baseline.
+# ---------------------------------------------------------------------------
+
+def fixed_point_forward(weights_q, biases_q, x_int, act_bits: int = 8,
+                        frac_bits: int = 7):
+    """weights_q: list of int32 (fan_in, fan_out) in Q1.(frac_bits) format."""
+    h = x_int
+    n = len(weights_q)
+    for l, (w, b) in enumerate(zip(weights_q, biases_q)):
+        # int32 accumulators suffice: |acc| ≤ 255·255·fan_in < 2^24
+        acc = h.astype(jnp.int32) @ w.astype(jnp.int32) + b.astype(jnp.int32)
+        if l < n - 1:
+            h = jnp.clip(acc >> frac_bits, 0, 2**act_bits - 1).astype(jnp.int32)
+        else:
+            h = acc
+    return h

@@ -1,0 +1,62 @@
+"""Genetic operators on flat integer chromosomes (paper §IV-A).
+
+Crossover "combines winning weights"; mutation "introduces random alterations
+to neuron weights". Mask genes mutate by single-bit flips (the natural move in
+the bit-pruning space); all other genes mutate by bounded random reset.
+
+The paper reports operator rates "0.2% and 0.7%" (mutation / crossover); we
+read them as probabilities 0.2-per-chromosome-scaled and 0.7 (the standard
+NSGA-II regime) and expose both as config — see GAConfig defaults.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .genome import GenomeSpec
+
+
+def uniform_crossover(key, a: jnp.ndarray, b: jnp.ndarray, pc: float):
+    """Pairwise uniform crossover. a, b: (n, genes) parent pools."""
+    k1, k2 = jax.random.split(key)
+    do = jax.random.uniform(k1, (a.shape[0], 1)) < pc
+    take_b = jax.random.bernoulli(k2, 0.5, a.shape)
+    child1 = jnp.where(do & take_b, b, a)
+    child2 = jnp.where(do & take_b, a, b)
+    return child1, child2
+
+
+def mutate(key, pop: jnp.ndarray, spec: GenomeSpec, pm_gene: float) -> jnp.ndarray:
+    """Per-gene mutation: bit-flip for masks, random reset otherwise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    do = jax.random.bernoulli(k1, pm_gene, pop.shape)
+
+    # mask genes: flip one uniformly chosen bit of the mask
+    u = jax.random.uniform(k2, pop.shape)
+    bitpos = jnp.floor(u * jnp.maximum(spec.mask_bits, 1)).astype(jnp.int32)
+    flipped = jnp.bitwise_xor(pop, jnp.left_shift(1, bitpos))
+
+    # other genes: uniform reset in [low, high)
+    u2 = jax.random.uniform(k3, pop.shape)
+    lo = spec.low.astype(jnp.float32)
+    hi = spec.high.astype(jnp.float32)
+    reset = jnp.floor(lo + u2 * (hi - lo)).astype(jnp.int32)
+
+    mutated = jnp.where(spec.is_mask, flipped, reset)
+    return jnp.where(do, mutated, pop)
+
+
+def make_offspring(key, pop: jnp.ndarray, rank, crowd, spec: GenomeSpec,
+                   pc: float, pm_gene: float) -> jnp.ndarray:
+    """Tournament → crossover → mutation: produces |pop| children."""
+    from .nsga2 import tournament_select
+
+    P = pop.shape[0]
+    k_sel, k_cx, k_mut = jax.random.split(key, 3)
+    parents = tournament_select(k_sel, rank, crowd, P)
+    pa = pop[parents[: P // 2]]
+    pb = pop[parents[P // 2:]]
+    c1, c2 = uniform_crossover(k_cx, pa, pb, pc)
+    children = jnp.concatenate([c1, c2], axis=0)
+    children = mutate(k_mut, children, spec, pm_gene)
+    return spec.clip(children)

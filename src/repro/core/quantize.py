@@ -1,0 +1,90 @@
+"""Fixed-point / pow2 quantization utilities (paper §III-A).
+
+Covers both regimes:
+  * printed-MLP regime — integer activations, pow2 weights as (sign, exp)
+    gene pairs (handled in ``repro.core.mlp``);
+  * LM regime — float tensors quantized to pow2 with packed uint8 storage
+    (1 sign bit + 7-bit biased exponent), consumed by the ``pow2_matmul``
+    Pallas kernel and its jnp reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# uint8 packing: bit 7 = sign (1 → negative), bits 0..6 = exponent + _EXP_BIAS.
+# exponent range: [-_EXP_BIAS, 127 - _EXP_BIAS). 0 weight → code 0 with a
+# dedicated "zero" flag exponent (-_EXP_BIAS maps to 2^-63 ≈ 0 in bf16 anyway,
+# but we keep an explicit zero code for exactness).
+_EXP_BIAS = 63
+ZERO_CODE = jnp.uint8(0x7F)  # sign=0, exp field all-ones: reserved for 0.0
+
+
+def quantize_inputs(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """[0,1] floats → unsigned ``bits``-bit integers (paper: 4-bit inputs)."""
+    hi = 2**bits - 1
+    return jnp.clip(jnp.round(x * hi), 0, hi).astype(jnp.int32)
+
+
+def qrelu(acc: jnp.ndarray, rshift: jnp.ndarray, out_bits: int) -> jnp.ndarray:
+    """QReLU: bounded ReLU on the adder-tree output (paper §III-B).
+
+    ``rshift`` is the free LSB-drop rescale gene (DESIGN.md): in bespoke
+    hardware dropping low wires costs nothing.
+    """
+    shifted = jnp.right_shift(acc, rshift)
+    return jnp.clip(shifted, 0, 2**out_bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# LM-scale pow2 weight quantization (packed uint8 storage)
+# ---------------------------------------------------------------------------
+
+def pow2_quantize(w: jnp.ndarray) -> jnp.ndarray:
+    """Round a float tensor to signed powers of two; return packed uint8.
+
+    w ≈ sign(w) · 2^round(log2|w|).  Zeros map to ``ZERO_CODE``.
+    """
+    sign = (w < 0).astype(jnp.uint8)
+    mag = jnp.abs(w)
+    exp = jnp.clip(
+        jnp.round(jnp.log2(jnp.maximum(mag, 2.0 ** (-_EXP_BIAS)))),
+        -_EXP_BIAS,
+        127 - _EXP_BIAS - 1,
+    ).astype(jnp.int32)
+    code = ((sign.astype(jnp.int32) << 7) | (exp + _EXP_BIAS)).astype(jnp.uint8)
+    return jnp.where(mag == 0, ZERO_CODE, code)
+
+
+def pow2_dequantize(code: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Packed uint8 → float powers of two. Pure-jnp oracle for the kernel."""
+    code_i = code.astype(jnp.int32)
+    sign = jnp.where((code_i >> 7) & 1 == 1, -1.0, 1.0)
+    exp = (code_i & 0x7F) - _EXP_BIAS
+    val = sign * jnp.exp2(exp.astype(jnp.float32))
+    return jnp.where(code == ZERO_CODE, 0.0, val).astype(dtype)
+
+
+def pow2_quantization_error(w: jnp.ndarray) -> jnp.ndarray:
+    """Relative Frobenius error of pow2 rounding (used by the LM search)."""
+    wq = pow2_dequantize(pow2_quantize(w))
+    return jnp.linalg.norm(w - wq) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+
+
+def int8_quantize(w: jnp.ndarray, axis: int = -1):
+    """Symmetric per-channel int8 (baseline format in the LM search space)."""
+    scale = jnp.max(jnp.abs(w), axis=axis, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fixed_point_quantize(w: jnp.ndarray, bits: int, frac_bits: int) -> jnp.ndarray:
+    """Exact-baseline 8-bit fixed point (Table I: '8-bit fixed point weights')."""
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(w * 2**frac_bits), lo, hi).astype(jnp.int32)

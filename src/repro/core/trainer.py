@@ -1,0 +1,149 @@
+"""GA-based hardware-approximation-aware training (paper §IV, Fig. 2).
+
+Single-host trainer: the full NSGA-II loop jitted as one generation step.
+Objectives (paper Eq. (3)):   [1 − Accuracy(θ, D),  Area(θ) in FAs]
+Constraint (paper §IV-A):      accuracy ≥ baseline − max_acc_loss (10 %)
+Init (paper §IV-A):            random population doped with ~10 % nearly
+                               non-approximate chromosomes from a float MLP.
+
+The distributed (island) variant lives in ``repro.core.islands``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .genome import GenomeSpec, MLPTopology
+from .quantize import quantize_inputs
+from .mlp import population_accuracy
+from .area import population_area
+from .nsga2 import evaluate_ranking, survivor_select
+from .operators import make_offspring
+from .pareto import pareto_front
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    pop_size: int = 256
+    generations: int = 150
+    crossover_rate: float = 0.7      # paper §V-A ("0.7")
+    mutation_rate_gene: float = 0.02  # paper's "0.2" read per-chromosome; see operators.py
+    doping_frac: float = 0.10        # paper §IV-A (~10 % nearly non-approximate)
+    max_acc_loss: float = 0.10       # paper §IV-A (10 % feasibility bound)
+    acc_only: bool = False           # Table III "GA" column: no area objective
+    seed: int = 0
+    log_every: int = 10
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GAState:
+    pop: jnp.ndarray        # (P, n_genes) int32
+    obj: jnp.ndarray        # (P, 2) [error, area]
+    viol: jnp.ndarray       # (P,)
+    rank: jnp.ndarray       # (P,)
+    crowd: jnp.ndarray      # (P,)
+    key: jnp.ndarray
+    gen: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.pop, self.obj, self.viol, self.rank, self.crowd,
+                self.key, self.gen), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class GATrainer:
+    """Hardware-aware NSGA-II trainer for one (topology, dataset) pair."""
+
+    def __init__(self, topo: MLPTopology, x01, labels, cfg: GAConfig = GAConfig(),
+                 baseline_acc: float | None = None,
+                 doping_seeds: Optional[Sequence[np.ndarray]] = None):
+        self.topo = topo
+        self.spec = GenomeSpec(topo)
+        self.cfg = cfg
+        self.x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
+        self.labels = jnp.asarray(labels, jnp.int32)
+        # chance-level baseline if no float model is supplied
+        self.baseline_acc = float(baseline_acc) if baseline_acc is not None else 1.0
+        self.doping_seeds = doping_seeds
+        self._step = jax.jit(self._generation)
+
+    # -- fitness -----------------------------------------------------------
+    def _fitness(self, pop):
+        acc = population_accuracy(self.spec, pop, self.x_int, self.labels)
+        if self.cfg.acc_only:        # conventional GA training (Table III)
+            area = jnp.zeros_like(acc)
+        else:
+            area = population_area(self.spec, pop).astype(jnp.float32)
+        obj = jnp.stack([1.0 - acc, area], axis=-1)
+        viol = jnp.maximum(0.0, (self.baseline_acc - acc) - self.cfg.max_acc_loss)
+        return obj, viol
+
+    # -- generation step (jitted) ------------------------------------------
+    def _generation(self, state: GAState) -> GAState:
+        key, k_off = jax.random.split(state.key)
+        children = make_offspring(k_off, state.pop, state.rank, state.crowd,
+                                  self.spec, self.cfg.crossover_rate,
+                                  self.cfg.mutation_rate_gene)
+        c_obj, c_viol = self._fitness(children)
+        pop = jnp.concatenate([state.pop, children], axis=0)
+        obj = jnp.concatenate([state.obj, c_obj], axis=0)
+        viol = jnp.concatenate([state.viol, c_viol], axis=0)
+        rank, crowd = evaluate_ranking(obj, viol)
+        keep = survivor_select(rank, crowd, self.cfg.pop_size)
+        rank2, crowd2 = evaluate_ranking(obj[keep], viol[keep])
+        return GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
+                       key, state.gen + 1)
+
+    # -- init ---------------------------------------------------------------
+    def init_state(self) -> GAState:
+        key = jax.random.PRNGKey(self.cfg.seed)
+        key, k_pop = jax.random.split(key)
+        pop = self.spec.random(k_pop, self.cfg.pop_size)
+        if self.doping_seeds is not None:
+            n_dope = max(1, int(self.cfg.doping_frac * self.cfg.pop_size))
+            seeds = np.stack([np.asarray(s) for s in self.doping_seeds])
+            reps = np.resize(np.arange(len(seeds)), n_dope)
+            pop = pop.at[:n_dope].set(jnp.asarray(seeds[reps]))
+        obj, viol = self._fitness(pop)
+        rank, crowd = evaluate_ranking(obj, viol)
+        return GAState(pop, obj, viol, rank, crowd, key, jnp.int32(0))
+
+    # -- public API ----------------------------------------------------------
+    def run(self, generations: int | None = None, verbose: bool = False):
+        gens = generations if generations is not None else self.cfg.generations
+        state = self.init_state()
+        history = []
+        t0 = time.time()
+        for g in range(gens):
+            state = self._step(state)
+            if verbose and (g % self.cfg.log_every == 0 or g == gens - 1):
+                err = np.asarray(state.obj[:, 0])
+                area = np.asarray(state.obj[:, 1])
+                history.append({
+                    "gen": g,
+                    "best_err": float(err.min()),
+                    "best_area": float(area.min()),
+                    "time_s": time.time() - t0,
+                })
+        jax.block_until_ready(state.pop)
+        self.evaluations = (gens + 1) * self.cfg.pop_size * int(self.labels.shape[0])
+        return state, history
+
+    def front(self, state: GAState):
+        """Feasible estimated Pareto front (paper Fig. 2 output)."""
+        obj = np.asarray(state.obj)
+        pops = np.asarray(state.pop)
+        feas = np.asarray(state.viol) <= 0
+        if not feas.any():
+            feas = np.ones_like(feas)
+        return pareto_front(obj[feas], extras={"genomes": pops[feas]})

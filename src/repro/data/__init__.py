@@ -1,0 +1,2 @@
+from .tabular import DATASETS, load_dataset, TabularDataset
+from .tokens import TokenPipeline, synthetic_token_batch

@@ -1,0 +1,85 @@
+"""Deterministic synthetic LM token pipeline (offline container).
+
+Produces shardable (global_batch, seq_len) int32 token batches with a
+Zipf-like marginal over the vocabulary and short-range repetition structure
+(so that a real LM can reduce loss on it — used by the smoke trainings).
+
+Designed like a production loader:
+  * per-step deterministic PRNG (restart-safe: step → batch is a pure map),
+  * host-sharded: each data-parallel host generates only its shard,
+  * double-buffered prefetch thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+def synthetic_token_batch(step: int, global_batch: int, seq_len: int,
+                          vocab_size: int, seed: int = 0,
+                          shard: tuple[int, int] = (0, 1)) -> dict:
+    """Batch for ``step``; ``shard=(i, n)`` returns rows [i::n] only.
+
+    Shard-consistent by construction: every row has its own counter-based
+    Philox stream keyed by (seed, step) and jumped to the row index, so any
+    (i, n) sharding of the same step yields exactly the matching rows of the
+    global batch — the invariant data-parallel training relies on.
+    """
+    i, n = shard
+    rows = np.arange(global_batch)[i::n]
+    base = np.random.Philox(key=(np.uint64(seed) << np.uint64(32))
+                            + np.uint64(step))
+    toks = np.empty((len(rows), seq_len + 1), np.int64)
+    masks = np.empty((len(rows), seq_len + 1), bool)
+    for out_idx, row in enumerate(rows):
+        rng = np.random.Generator(base.jumped(int(row)))
+        z = rng.zipf(1.3, size=seq_len + 1).astype(np.int64)
+        toks[out_idx] = z
+        masks[out_idx] = rng.random(seq_len + 1) < 0.25
+    # Zipf marginal, rank-mapped into the vocab
+    toks = (toks * 2_654_435_761) % max(vocab_size - 2, 1) + 1
+    # inject short-range structure: with p=0.25, copy the token 8 back
+    toks[:, 8:] = np.where(masks[:, 8:], toks[:, :-8], toks[:, 8:])
+    toks = toks.astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class TokenPipeline:
+    """Prefetching iterator over synthetic batches (restart from any step)."""
+
+    def __init__(self, global_batch: int, seq_len: int, vocab_size: int,
+                 seed: int = 0, start_step: int = 0, prefetch: int = 2,
+                 shard: tuple[int, int] = (0, 1)):
+        self.args = (global_batch, seq_len, vocab_size, seed)
+        self.shard = shard
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = synthetic_token_batch(step, *self.args, shard=self.shard)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step
+        return batch
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=1.0)

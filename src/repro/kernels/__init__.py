@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+pure-jnp oracle (ref.py) and a jit'd dispatch wrapper (ops.py). Validated in
+interpret mode on CPU; compiled Mosaic on TPU.
+"""
+from .pow2_matmul import pow2_linear, pow2_matmul, pow2_matmul_ref, pack_weights
+from .flash_attention import causal_attention, flash_attention, flash_attention_ref
+from .pop_mlp import population_correct, pop_mlp_correct, pop_mlp_correct_ref
+from .ssd_scan import state_scan, ssd_state_scan, ssd_state_scan_ref

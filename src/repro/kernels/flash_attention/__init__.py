@@ -1,0 +1,3 @@
+from .ops import causal_attention
+from .kernel import flash_attention
+from .ref import flash_attention_ref

@@ -1,0 +1,19 @@
+"""Public op: causal flash attention with kernel/reference dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import flash_attention_ref
+
+
+def causal_attention(q, k, v, *, use_kernel=None, interpret=None,
+                     block_q=128, block_k=128):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return flash_attention(
+            q, k, v, block_q=block_q, block_k=block_k,
+            interpret=(jax.default_backend() != "tpu"
+                       if interpret is None else interpret))
+    return flash_attention_ref(q, k, v)

@@ -1,0 +1,3 @@
+from .ops import population_correct
+from .kernel import pop_mlp_correct
+from .ref import pop_mlp_correct_ref

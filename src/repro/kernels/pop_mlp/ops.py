@@ -1,0 +1,19 @@
+"""Public op: population fitness with kernel/reference dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import pop_mlp_correct
+from .ref import pop_mlp_correct_ref
+
+
+def population_correct(pop, x_int, labels, *, spec, use_kernel=None,
+                       interpret=None):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return pop_mlp_correct(
+            pop, x_int, labels, spec=spec,
+            interpret=(jax.default_backend() != "tpu"
+                       if interpret is None else interpret))
+    return pop_mlp_correct_ref(pop, x_int, labels, spec=spec)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: population accuracy via repro.core.mlp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.genome import GenomeSpec
+from ...core.mlp import population_accuracy
+
+
+def pop_mlp_correct_ref(pop, x_int, labels, *, spec: GenomeSpec):
+    acc = population_accuracy(spec, pop, x_int, labels)
+    return jnp.round(acc * labels.shape[0]).astype(jnp.int32)

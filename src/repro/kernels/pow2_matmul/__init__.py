@@ -1,0 +1,3 @@
+from .ops import pow2_linear, pack_weights
+from .kernel import pow2_matmul
+from .ref import pow2_matmul_ref

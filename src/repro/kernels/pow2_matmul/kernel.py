@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: matmul against packed pow2 (sign, exponent) weights.
+
+The paper's multiplier-less neuron (Eq. (1)) adapted to the TPU memory
+hierarchy (DESIGN.md §3): weights live in HBM as ONE byte each
+(bit7 = sign, bits0..6 = biased exponent). Decoding a pow2 value to float is
+pure exponent-field insertion — (exp+127)<<23 bit-cast — done on the VPU in
+VMEM right before the MXU dot. The f32/bf16 weight tensor never exists in
+HBM: weight bandwidth drops 2–4×, which is the memory-roofline analog of the
+paper's adder-area win.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; f32 accumulation in a VMEM scratch.
+Block shapes default to MXU-aligned (128, 512, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.quantize import _EXP_BIAS
+
+_ZERO = 0x7F  # python literal: jnp constants may not be captured by kernels
+
+
+def _decode_pow2(w_packed: jnp.ndarray, dtype) -> jnp.ndarray:
+    """uint8 codes → ±2^exp floats via exponent-bit insertion (no exp2 call)."""
+    w = w_packed.astype(jnp.int32)
+    sign = (w >> 7) & 1
+    exp = (w & 0x7F) - _EXP_BIAS
+    bits = ((exp + 127) << 23).astype(jnp.uint32)          # f32 exponent field
+    mag = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    val = jnp.where(sign == 1, -mag, mag)
+    val = jnp.where(w == _ZERO, 0.0, val)
+    return val.astype(dtype)
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wf = _decode_pow2(w_ref[...], x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], wf,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pow2_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, *, bm: int = 128,
+                bn: int = 512, bk: int = 128,
+                interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) bf16/f32 × packed (K, N) uint8 → (M, N) f32."""
+    M, K = x.shape
+    K2, N = w_packed.shape
+    assert K == K2, (x.shape, w_packed.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[_vmem_scratch((bm, bn))],
+        interpret=interpret,
+    )(x, w_packed)
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,34 @@
+"""Public op: pow2-quantized linear with kernel/reference dispatch.
+
+On CPU (this container) the Pallas kernel runs in interpret mode for
+validation only; production paths select the compiled kernel on TPU and the
+jnp reference elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import pow2_matmul
+from .ref import pow2_matmul_ref
+from ...core.quantize import pow2_quantize
+
+
+def pow2_linear(x, w_packed, *, use_kernel: bool | None = None,
+                interpret: bool | None = None):
+    """x: (..., K) × packed (K, N) → (..., N) f32."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel:
+        out = pow2_matmul(x2, w_packed,
+                          interpret=(jax.default_backend() != "tpu"
+                                     if interpret is None else interpret))
+    else:
+        out = pow2_matmul_ref(x2, w_packed)
+    return out.reshape(lead + (w_packed.shape[-1],))
+
+
+def pack_weights(w):
+    """Float weights → packed pow2 uint8 (storage format)."""
+    return pow2_quantize(w)

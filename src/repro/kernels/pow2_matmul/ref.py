@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the pow2 matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.quantize import pow2_dequantize
+
+
+def pow2_matmul_ref(x: jnp.ndarray, w_packed: jnp.ndarray) -> jnp.ndarray:
+    w = pow2_dequantize(w_packed, x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,3 @@
+from .ops import state_scan
+from .kernel import ssd_state_scan
+from .ref import ssd_state_scan_ref

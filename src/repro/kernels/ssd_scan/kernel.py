@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: Mamba2 SSD inter-chunk state recurrence.
+
+The sequential bottleneck of the chunked SSD layer (repro.models.ssm):
+    h_{c+1} = decay_c ⊙ h_c + state_c          (c = 0..n_chunks−1)
+emitting the state *entering* every chunk. XLA lowers the jnp version as an
+unfusable while-loop over (b, H, P, N) HBM tensors; the kernel instead keeps
+the running state resident in VMEM per (batch, head-block) grid cell and
+streams chunks through it — one HBM read of state_c and one write of h_prev
+per chunk, zero loop-carried HBM traffic.
+
+Grid: (B, H/bh). Chunk loop inside the kernel body (n_chunks is small:
+seq/chunk ≤ 64 for the assigned shapes — fully unrolled for the VPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(state_ref, decay_ref, out_ref, h_ref, *, n_chunks: int):
+    h_ref[...] = jnp.zeros_like(h_ref)                     # (1, bh, P, N)
+    for c in range(n_chunks):
+        out_ref[0, c] = h_ref[0]
+        h_ref[0] = (h_ref[0] * decay_ref[0, c][:, None, None]
+                    + state_ref[0, c])
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def ssd_state_scan(state_c: jnp.ndarray, chunk_decay: jnp.ndarray, *,
+                   bh: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """state_c: (b, nc, H, P, N) f32; chunk_decay: (b, nc, H) f32.
+
+    Returns h_prev: (b, nc, H, P, N) — state entering each chunk.
+    """
+    b, nc, H, P, N = state_c.shape
+    bh = min(bh, H)
+    assert H % bh == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=(b, H // bh),
+        in_specs=[
+            pl.BlockSpec((1, nc, bh, P, N), lambda i, j: (i, 0, j, 0, 0)),
+            pl.BlockSpec((1, nc, bh), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, nc, bh, P, N), lambda i, j: (i, 0, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, H, P, N), jnp.float32),
+        scratch_shapes=[_vmem((1, bh, P, N))],
+        interpret=interpret,
+    )(state_c, chunk_decay)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

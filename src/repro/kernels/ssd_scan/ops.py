@@ -1,0 +1,18 @@
+"""Public op: SSD state scan with kernel/reference dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_state_scan
+from .ref import ssd_state_scan_ref
+
+
+def state_scan(state_c, chunk_decay, *, use_kernel=None, interpret=None):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return ssd_state_scan(
+            state_c, chunk_decay,
+            interpret=(jax.default_backend() != "tpu"
+                       if interpret is None else interpret))
+    return ssd_state_scan_ref(state_c, chunk_decay)

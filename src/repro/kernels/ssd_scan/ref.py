@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD inter-chunk state scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_state_scan_ref(state_c: jnp.ndarray, chunk_decay: jnp.ndarray):
+    """state_c: (b, nc, H, P, N); chunk_decay: (b, nc, H) → h_prev same shape
+    as state_c (state entering each chunk; identical to models.ssm scan)."""
+
+    def scan_fn(h, inp):
+        sc, dec = inp
+        return h * dec[:, :, None, None] + sc, h
+
+    b, nc, H, P, N = state_c.shape
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    return jnp.moveaxis(h_prev, 0, 1)

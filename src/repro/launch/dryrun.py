@@ -1,0 +1,293 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+512 placeholder devices and extract roofline terms (brief §MULTI-POD DRY-RUN).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+# The placeholder-device flag MUST precede any jax import (jax locks the
+# device count at first init). Do NOT set this anywhere global.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get_config, list_archs, SHAPES, cell_is_runnable  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..analysis.roofline import analyze_compiled, memory_analysis_dict, V5E  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _train_state_shapes(model):
+    """ShapeDtypeStruct train state (params + AdamW moments + step)."""
+    ps = model.param_shapes()
+    sd = model.cfg.opt_state_dtype
+    moments = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, sd), ps)
+    return {"params": ps,
+            "opt": {"m": moments, "v": moments,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def model_flops_global(cfg, shape) -> float:
+    """6·N(active)·tokens for train; 2·N·tokens for inference shapes."""
+    from ..models.params import count_params
+    from ..models.transformer import model_decl
+
+    n_total = count_params(model_decl(cfg, 16))
+    n_active = n_total
+    if cfg.moe:
+        m = cfg.moe
+        routed = (m.n_experts * 3 * cfg.d_model * m.d_ff
+                  * (cfg.n_layers // m.every_k_layers))
+        active_routed = routed * m.top_k // m.n_experts
+        n_active = n_total - routed + active_routed
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+
+def cost_config(cfg, shape, n_layers: int):
+    """Unrolled, single-attention-block, unchunked-loss variant of ``cfg``
+    with ``n_layers`` layers. XLA's cost_analysis counts loop bodies once, so
+    roofline terms are measured on two small unrolled lowerings and
+    extrapolated linearly in depth (exact: layers are HLO-identical).
+
+    With causal_fold the attention tile structure IS the optimization, so the
+    tile scan is fully unrolled instead of being collapsed to one block."""
+    if cfg.causal_fold:
+        return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False,
+                                   loss_chunk=0, attn_unroll=True)
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, scan_layers=False, loss_chunk=0,
+        attn_block_q=max(cfg.attn_block_q, shape.seq_len),
+        attn_block_k=max(cfg.attn_block_k, shape.seq_len))
+
+
+# §Perf optimized variants for the three hillclimb cells (EXPERIMENTS.md)
+OPT_VARIANTS = {
+    ("minicpm3-4b", "prefill_32k"): dict(
+        causal_fold=True, serve_tp_only=True, attn_block_q=2048,
+        attn_block_k=2048),
+    ("llama4-maverick-400b-a17b", "decode_32k"): dict(
+        serve_tp_only=True, kv_quant="int8", quant="pow2",
+        quant_storage=True),
+    ("qwen3-14b", "decode_32k"): dict(
+        serve_tp_only=True, kv_quant="int8", quant="pow2",
+        quant_storage=True),
+    # bonus (beyond the 3 required): the remaining collective-bound cell
+    ("mixtral-8x7b", "long_500k"): dict(
+        serve_tp_only=True, kv_quant="int8", quant="pow2",
+        quant_storage=True),
+}
+
+
+def opt_config(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    over = OPT_VARIANTS.get((arch, shape_name))
+    if over is None:
+        return None
+    return dataclasses.replace(cfg, **over)
+
+
+def _cost_depths(cfg) -> tuple[int, int]:
+    step = cfg.shared_attn_every or (cfg.moe.every_k_layers if cfg.moe else 1)
+    return step, 2 * step
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               cfg_override=None):
+    """Returns (lowered, mesh, model, shape) for one dry-run cell."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    model = build_model(cfg, tp=tp)
+
+    if shape.kind == "train":
+        step, _ = model.make_train_step(mesh, multi_pod)
+        state_shapes = _train_state_shapes(model)
+        state_specs = _named(mesh, model.train_state_specs())
+        args, in_specs = model.input_specs(shape, multi_pod, mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(state_specs, _named(mesh, in_specs)),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, args)
+    elif shape.kind == "prefill":
+        fn = model.make_prefill(mesh, multi_pod)
+        args, in_specs = model.input_specs(shape, multi_pod, mesh)
+        jitted = jax.jit(fn, in_shardings=(
+            _named(mesh, model.param_specs()), _named(mesh, in_specs)))
+        lowered = jitted.lower(model.param_shapes(), args)
+    else:  # decode
+        fn = model.make_decode_step(mesh, multi_pod)
+        args, in_specs = model.input_specs(shape, multi_pod, mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_named(mesh, model.param_specs()),
+                          _named(mesh, in_specs["token"]),
+                          _named(mesh, in_specs["caches"]),
+                          _named(mesh, in_specs["pos"])),
+            donate_argnums=(2,))
+        lowered = jitted.lower(model.param_shapes(), args["token"],
+                               args["caches"], args["pos"])
+    return lowered, mesh, model, shape
+
+
+from ..analysis.roofline import extrapolate_depth as _extrapolate  # noqa: E402
+
+
+def _cost_metrics(compiled, pod_size) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    from ..analysis.roofline import parse_collectives
+
+    ops = parse_collectives(compiled.as_text(), pod_size=pod_size)
+    m = {"flops": float(cost.get("flops", 0.0)),
+         "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+         "coll_ici": float(sum(o.bytes for o in ops if not o.cross_pod)),
+         "coll_dcn": float(sum(o.bytes for o in ops if o.cross_pod))}
+    for o in ops:
+        m[f"coll_{o.kind}"] = m.get(f"coll_{o.kind}", 0.0) + o.bytes
+    return m
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, roofline: bool = True,
+             cfg_override=None) -> dict:
+    t0 = time.time()
+    cfg = cfg_override or get_config(arch)
+    ok, reason = cell_is_runnable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+    pod_size = 256 if multi_pod else None
+    try:
+        # 1) the real (scanned, remat, chunked-loss) program: proves the cell
+        #    lowers+compiles on the production mesh; gives memory_analysis.
+        lowered, mesh, model, shape = lower_cell(arch, shape_name, multi_pod,
+                                                 cfg_override=cfg)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        n_dev = mesh.devices.size
+        mem = memory_analysis_dict(compiled)
+        raw = _cost_metrics(compiled, pod_size)
+
+        rec = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "ok", "n_devices": n_dev,
+            "n_params": model.n_params(),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem, "raw_once_counted": raw,
+        }
+
+        # 2+3) depth-extrapolated roofline terms from two unrolled lowerings
+        #      (XLA cost_analysis counts while bodies once — see cost_config).
+        if roofline:
+            la, lb = _cost_depths(cfg)
+            ms = []
+            for L in (la, lb):
+                lw, *_ = lower_cell(arch, shape_name, multi_pod,
+                                    cfg_override=cost_config(cfg, shape, L))
+                ms.append(_cost_metrics(lw.compile(), pod_size))
+            full = _extrapolate(ms[0], ms[1], la, lb, cfg.n_layers)
+            hw = V5E
+            t_c = full["flops"] / hw["peak_flops_bf16"]
+            t_m = full["hbm_bytes"] / hw["hbm_bw"]
+            t_x = (full["coll_ici"] / hw["ici_bw"]
+                   + full["coll_dcn"] / (hw["ici_bw"] * hw["dcn_derate"]))
+            dom = max((("compute", t_c), ("memory", t_m),
+                       ("collective", t_x)), key=lambda kv: kv[1])[0]
+            mf = model_flops_global(cfg, shape) / n_dev
+            rec["roofline"] = {
+                **{k: v for k, v in full.items()},
+                "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+                "dominant": dom, "model_flops_per_dev": mf,
+                "useful_flops_ratio": mf / full["flops"] if full["flops"] else 0,
+                "compute_fraction": t_c / max(t_c, t_m, t_x) if t_c else 0.0,
+            }
+        if verbose:
+            msg = (f"[dryrun] {arch} × {shape_name} "
+                   f"({'2-pod' if multi_pod else '1-pod'}): OK")
+            if roofline:
+                r = rec["roofline"]
+                msg += (f"  flops/dev={r['flops']:.3e} bytes/dev="
+                        f"{r['hbm_bytes']:.3e} coll={r['coll_ici']:.3e}"
+                        f"+{r['coll_dcn']:.3e}dcn dom={r['dominant']}"
+                        f" useful={r['useful_flops_ratio']:.2f}")
+            msg += f" (compile {t_compile:.0f}s)"
+            print(msg, flush=True)
+            if mem:
+                print(f"         memory_analysis: {mem}", flush=True)
+        return rec
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="run the §Perf optimized variants (3 cells)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = []
+    if args.opt:
+        for (a, s) in OPT_VARIANTS:
+            rec = run_cell(a, s, args.multi_pod, cfg_override=opt_config(a, s))
+            rec["variant"] = "opt"
+            results.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+        n_ok = sum(r["status"] == "ok" for r in results)
+        print(f"[dryrun --opt] {n_ok}/{len(results)} ok")
+        return 0 if n_ok == len(results) else 1
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                results.append(run_cell(a, s, mp))
+                if args.out:  # checkpoint progress after every cell
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print("  ERROR:", r["arch"], r["shape"], r["error"])
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) ("data","model") single pod; (2,16,16) ("pod","data","model")
+    for 2 pods = 512 chips. TP stays inside a pod; only DP crosses DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

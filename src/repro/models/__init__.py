@@ -1,0 +1,1 @@
+from .model_factory import build_model, Model

@@ -1,0 +1,158 @@
+"""GQA/MHA attention with RoPE / M-RoPE, qk-norm, sliding window, KV cache.
+
+Head counts are padded/replicated to the TP degree at *config resolution*
+(ArchConfig.heads_padded / kv_heads_padded): padded query heads have
+zero-initialised o-proj rows (output-exact) and KV heads replicate their
+group (mathematically exact GQA) — DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDecl
+from .common import (rmsnorm_decl, rmsnorm, dense_decl, dense, rope_angles,
+                     mrope_angles, apply_rope, blockwise_attention,
+                     decode_attention, update_cache, shard_act, head_spec)
+
+
+def attn_decl(cfg: ArchConfig, tp: int = 16) -> dict:
+    H, Hkv, D = cfg.heads_padded(tp), cfg.kv_heads_padded(tp), cfg.head_dim
+    p = {
+        "wq": dense_decl(cfg.d_model, H * D, axes=("fsdp", "model")),
+        "wk": dense_decl(cfg.d_model, Hkv * D, axes=("fsdp", "model")),
+        "wv": dense_decl(cfg.d_model, Hkv * D, axes=("fsdp", "model")),
+        "wo": dense_decl(H * D, cfg.d_model, axes=("model", "fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_decl(D)
+        p["k_norm"] = rmsnorm_decl(D)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: jnp.ndarray, tp: int = 16):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.heads_padded(tp), cfg.kv_heads_padded(tp), cfg.head_dim
+    q = dense(p["wq"], x, cfg.quant).reshape(B, S, H, D)
+    k = dense(p["wk"], x, cfg.quant).reshape(B, S, Hkv, D)
+    v = dense(p["wv"], x, cfg.quant).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _angles(cfg: ArchConfig, positions: jnp.ndarray) -> Optional[jnp.ndarray]:
+    if cfg.pos_kind == "rope":
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    if cfg.pos_kind == "mrope":
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.mrope_sections)
+    return None
+
+
+def attention(cfg: ArchConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              tp: int = 16, mesh=None, dp_axes=("data",)) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence (train / prefill) attention.
+
+    positions: (B, S) for rope, (3, B, S) for mrope.
+    Returns (output, cache) where cache = {"k","v"} of (B, S, Hkv, D).
+    """
+    q, k, v = _project_qkv(cfg, p, x, tp)
+    ang = _angles(cfg, positions)
+    if ang is not None:
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+    hs = head_spec(mesh, dp_axes, x.shape[0])
+    if hs is not None:
+        q, k, v = (shard_act(t, mesh, hs) for t in (q, k, v))
+    out = blockwise_attention(
+        q, k, v, causal=True, window=cfg.window,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        causal_fold=cfg.causal_fold, unroll=cfg.attn_unroll)
+    B, S, H, D = out.shape
+    y = dense(p["wo"], out.reshape(B, S, H * D), cfg.quant)
+
+    # Cache for decode. With SWA the cache is a ring of size `window`:
+    # absolute position p lives at slot p % window (decode continues the ring).
+    if cfg.window and S > cfg.window:
+        W = cfg.window
+        slots = jnp.arange(S - W, S) % W
+        k = jnp.zeros_like(k[:, :W]).at[:, slots].set(k[:, S - W:])
+        v = jnp.zeros_like(v[:, :W]).at[:, slots].set(v[:, S - W:])
+    return y, _emit_cache(cfg, k, v)
+
+
+def _kv_quantize(x):
+    """Per-(position, head) int8 with a bf16 scale over the head dim —
+    the serve-time KV compression of §Perf (paper-aligned low-bit storage)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True) / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(dtype) * scale.astype(dtype))
+
+
+def _emit_cache(cfg: ArchConfig, k, v) -> dict:
+    if cfg.kv_quant == "int8":
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        return {"k": kq, "v": vq, "ks": ks, "vs": vs}
+    return {"k": k.astype(cfg.kv_cache_dtype),
+            "v": v.astype(cfg.kv_cache_dtype)}
+
+
+def attention_decode(cfg: ArchConfig, p: dict, x: jnp.ndarray, cache: dict,
+                     pos: jnp.ndarray, tp: int = 16) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, d); cache k/v: (B, S, Hkv, D); pos: (B,).
+
+    With a sliding window the cache is a ring buffer of size ``window``.
+    """
+    q, k, v = _project_qkv(cfg, p, x, tp)
+    if cfg.pos_kind == "mrope":
+        # decode: all three streams advance with the token index
+        positions = jnp.broadcast_to(pos[None, :, None], (3,) + pos.shape + (1,))
+    else:
+        positions = pos[:, None]
+    ang = _angles(cfg, positions)
+    if ang is not None:
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+    if cfg.kv_quant == "int8":
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        new_cache = {
+            "k": update_cache(cache["k"], kq, pos),
+            "v": update_cache(cache["v"], vq, pos),
+            "ks": update_cache(cache["ks"], ks, pos),
+            "vs": update_cache(cache["vs"], vs, pos),
+        }
+        k_eff = _kv_dequantize(new_cache["k"], new_cache["ks"], q.dtype)
+        v_eff = _kv_dequantize(new_cache["v"], new_cache["vs"], q.dtype)
+    else:
+        new_cache = {"k": update_cache(cache["k"], k, pos),
+                     "v": update_cache(cache["v"], v, pos)}
+        k_eff, v_eff = new_cache["k"], new_cache["v"]
+    out = decode_attention(q, k_eff, v_eff, pos)
+    B = x.shape[0]
+    y = dense(p["wo"], out.reshape(B, 1, -1), cfg.quant)
+    return y, new_cache
+
+
+def cache_decl(cfg: ArchConfig, batch: int, seq: int, tp: int = 16) -> dict:
+    """Cache shape/dtype declaration (per layer) for serving input specs."""
+    Hkv, D = cfg.kv_heads_padded(tp), cfg.head_dim
+    cap = min(seq, cfg.window) if cfg.window else seq
+    shape = (batch, cap, Hkv, D)
+    if cfg.kv_quant == "int8":
+        return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "ks": jax.ShapeDtypeStruct((batch, cap, Hkv, 1), jnp.bfloat16),
+                "vs": jax.ShapeDtypeStruct((batch, cap, Hkv, 1), jnp.bfloat16)}
+    return {"k": jax.ShapeDtypeStruct(shape, cfg.kv_cache_dtype),
+            "v": jax.ShapeDtypeStruct(shape, cfg.kv_cache_dtype)}

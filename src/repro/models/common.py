@@ -1,0 +1,333 @@
+"""Shared building blocks for the model zoo: norms, RoPE/M-RoPE, dense
+projections (with the paper's pow2 quantization as a first-class option),
+and memory-efficient blockwise causal attention (online softmax over KV
+tiles — the pure-XLA flash pattern; the Pallas twin lives in repro.kernels).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDecl
+from ..core.quantize import pow2_quantize, pow2_dequantize
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decl(dim: int) -> dict:
+    return {"scale": ParamDecl((dim,), (None,), init="ones", dtype=F32)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense projection with optional hardware approximation (paper technique
+# at LM scale — DESIGN.md §4 "Weight-level")
+# ---------------------------------------------------------------------------
+
+def dense_decl(din: int, dout: int, axes=( "fsdp", "model"), init="fan_in") -> dict:
+    return {"w": ParamDecl((din, dout), axes, init=init, quantizable=True)}
+
+
+def maybe_dequant(w: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Packed pow2 uint8 storage → compute dtype (fuses into the dot)."""
+    if w.dtype == jnp.uint8:
+        return pow2_dequantize(w, dtype)
+    return w
+
+
+def dense(p: dict, x: jnp.ndarray, quant: str = "none") -> jnp.ndarray:
+    w = maybe_dequant(p["w"], x.dtype)
+    if quant == "pow2" and p["w"].dtype != jnp.uint8:
+        # straight-through pow2: multiplier-less weights (paper Eq. (1)).
+        wq = pow2_dequantize(pow2_quantize(w), w.dtype)
+        w = w + jax.lax.stop_gradient(wq - w)
+    elif quant == "int8":
+        from ..core.quantize import int8_quantize, int8_dequantize
+        q, s = int8_quantize(w)
+        wq = int8_dequantize(q, s, w.dtype)
+        w = w + jax.lax.stop_gradient(wq - w)
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """positions (..., S) int → angles (..., S, dim//2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    return positions.astype(F32)[..., None] * inv
+
+
+def mrope_angles(positions: jnp.ndarray, dim: int, theta: float,
+                 sections: tuple[int, ...]) -> jnp.ndarray:
+    """positions (3, B, S) (t/h/w streams) → angles (B, S, dim//2).
+
+    Frequency bands are assigned to position streams per ``sections``
+    (Qwen2-VL §M-RoPE); sections sum to dim//2.
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    parts, off = [], 0
+    for sid, width in enumerate(sections):
+        parts.append(positions[sid].astype(F32)[..., None] * inv[off:off + width])
+        off += width
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, D), angles (B, S, D//2) — rotate-half convention."""
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) multi-query attention, pure XLA
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def shard_act(x, mesh, spec):
+    """Explicit activation sharding constraint.
+
+    GSPMD does NOT propagate head-sharding through the blockwise-attention
+    scan (the online-softmax carry has no annotation), silently replicating
+    the S² einsums over the model axis — detected in the §Perf loop as a 17×
+    gap between measured and analytic per-layer FLOPs. Every mixer therefore
+    pins its per-head activations here.
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def head_spec(mesh, dp_axes, batch: int):
+    """(B, S, H, D) activation spec: batch over dp (when divisible), heads
+    over model."""
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        return None
+    ndp = 1
+    for a in dp_axes:
+        ndp *= mesh.shape[a]
+    dp = dp_axes if (batch % ndp == 0 and batch >= ndp) else None
+    return P(dp, None, "model", None)
+
+
+def _pad_len(s: int, b: int) -> int:
+    return (b - s % b) % b
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 1024,
+                        q_offset: int = 0, causal_fold: bool = False,
+                        unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention over KV tiles.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    Memory peak is O(block_q · block_k) per (batch, head) instead of
+    O(Sq · Skv). Causal masking is applied per tile; fully-masked tiles are
+    still computed (static shapes) — unless ``causal_fold`` is set, which
+    dispatches to the folded-triangle schedule (~2× fewer tiles; §Perf).
+    """
+    if (causal_fold and causal and not window and q.shape[1] == k.shape[1]
+            and q_offset == 0):
+        return _causal_fold_attention(q, k, v, block=block_q, unroll=unroll)
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]                      # MLA: value width ≠ qk width
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    pq, pk = _pad_len(Sq, block_q), _pad_len(Skv, block_k)
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // block_q, k.shape[1] // block_k
+
+    # inputs stay bf16 (MXU rate); accumulation in f32 (preferred_element_type)
+    qr = q.reshape(B, nq, block_q, Hkv, G, D)
+    kr = k.reshape(B, nk, block_k, Hkv, D)
+    vr = v.reshape(B, nk, block_k, Hkv, Dv)
+
+    q_pos = (q_offset + jnp.arange(nq * block_q)).reshape(nq, 1, block_q)
+    # running (max, denom, acc)
+    m0 = jnp.full((B, nq, block_q, Hkv, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, nq, block_q, Hkv, G), F32)
+    a0 = jnp.zeros((B, nq, block_q, Hkv, G, Dv), F32)
+
+    def step(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_index_in_dim(kr, j, 1, keepdims=False)  # (B,bk,Hkv,D)
+        vj = jax.lax.dynamic_index_in_dim(vr, j, 1, keepdims=False)
+        s = jnp.einsum("bnqhgd,bkhd->bnqhgk", qr, kj,
+                       preferred_element_type=F32) * scale   # (B,nq,bq,Hkv,G,bk)
+        k_pos = j * block_k + jnp.arange(block_k)
+        mask = jnp.ones((nq, block_q, block_k), bool)
+        if causal:
+            mask &= q_pos.transpose(0, 2, 1) >= k_pos[None, None, :]
+        if window:
+            mask &= (q_pos.transpose(0, 2, 1) - k_pos[None, None, :]) < window
+        mask &= (k_pos < Skv)[None, None, :]
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bnqhgk,bkhd->bnqhgd", p.astype(q.dtype), vj,
+            preferred_element_type=F32)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nk),
+                                  unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, nq * block_q, H, Dv)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def _causal_fold_attention(q, k, v, *, block: int = 512,
+                           unroll: bool = False) -> jnp.ndarray:
+    """Folded-triangle causal attention (§Perf optimization 1).
+
+    Baseline blockwise causal attention computes nq·nk tiles but half are
+    fully masked. Folding pairs q-row-block p with row n−1−p: row p needs
+    kv blocks [0..p], row n−1−p needs [0..n−1−p] — together exactly n+1
+    tiles for EVERY pair. A scan of length n+1 over pairs therefore does
+    (n+1)·n/2 tile-einsums instead of n², a ~2× cut in both FLOPs and bytes
+    with static shapes (no ragged loops). The middle pair of an odd n
+    duplicates one row (slot b discarded) — bounded waste of 1/n.
+    """
+    B, S, H, D = q.shape
+    _, _, Hkv, Dv = k.shape[1], k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    pad = _pad_len(S, block)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = q.shape[1] // block
+    P = (n + 1) // 2
+
+    qr = q.reshape(B, n, block, Hkv, G, D)
+    kr = k.reshape(B, n, block, Hkv, D)
+    vr = v.reshape(B, n, block, Hkv, Dv)
+
+    rows_a = jnp.arange(P)                       # (P,)
+    rows_b = n - 1 - rows_a
+    # (B, P, 2, bq, Hkv, G, D): the two folded rows per pair
+    qp = jnp.stack([qr[:, rows_a], qr[:, rows_b]], axis=2)
+
+    m0 = jnp.full((B, P, 2, block, Hkv, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, P, 2, block, Hkv, G), F32)
+    a0 = jnp.zeros((B, P, 2, block, Hkv, G, Dv), F32)
+
+    def step(carry, t):
+        m, l, acc = carry
+        in_a = t <= rows_a                                  # (P,)
+        kv_idx = jnp.where(in_a, t, t - rows_a - 1)         # (P,)
+        kv_idx = jnp.clip(kv_idx, 0, n - 1)
+        kj = kr[:, kv_idx]                                  # (B,P,bk,Hkv,D)
+        vj = vr[:, kv_idx]
+        slot = jnp.where(in_a, 0, 1)                        # (P,)
+        q_act = jnp.take_along_axis(
+            qp, slot[None, :, None, None, None, None, None], axis=2)[:, :, 0]
+        s = jnp.einsum("bpqhgd,bpkhd->bpqhgk", q_act, kj,
+                       preferred_element_type=F32) * scale
+        row = jnp.where(in_a, rows_a, rows_b)               # (P,)
+        qpos = row[:, None] * block + jnp.arange(block)[None, :]     # (P,bq)
+        kpos = kv_idx[:, None] * block + jnp.arange(block)[None, :]  # (P,bk)
+        mask = (qpos[:, :, None] >= kpos[:, None, :]) & (kpos < S)[:, None, :]
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+
+        m_act = jnp.take_along_axis(
+            m, slot[None, :, None, None, None, None], axis=2)[:, :, 0]
+        l_act = jnp.take_along_axis(
+            l, slot[None, :, None, None, None, None], axis=2)[:, :, 0]
+        a_act = jnp.take_along_axis(
+            acc, slot[None, :, None, None, None, None, None], axis=2)[:, :, 0]
+
+        m_new = jnp.maximum(m_act, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_act - m_new)
+        l_new = l_act * alpha + jnp.sum(p, axis=-1)
+        a_new = a_act * alpha[..., None] + jnp.einsum(
+            "bpqhgk,bpkhd->bpqhgd", p.astype(q.dtype), vj,
+            preferred_element_type=F32)
+
+        sel = (slot[None, :, None, None, None, None]
+               == jnp.arange(2)[None, None, :, None, None, None])
+        m = jnp.where(sel, m_new[:, :, None], m)
+        l = jnp.where(sel, l_new[:, :, None], l)
+        acc = jnp.where(sel[..., None], a_new[:, :, None], acc)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n + 1),
+                                  unroll=(n + 1) if unroll else 1)
+    out_pairs = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,P,2,bq,…)
+    # unfold: row a ← slot 0, row b ← slot 1 (odd-n middle: a == b, slot 0)
+    out = jnp.zeros((B, n, block, Hkv, G, Dv), F32)
+    out = out.at[:, rows_a].set(out_pairs[:, :, 0])
+    out = out.at[:, rows_b].set(jnp.where(
+        (rows_a == rows_b)[None, :, None, None, None, None],
+        out[:, rows_b], out_pairs[:, :, 1]))
+    out = out.reshape(B, n * block, H, Dv)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
+    """Single-token attention against a (possibly ring) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D); pos: (B,) absolute index of the
+    newest token. Cache capacity S either covers the full context (slot ==
+    absolute position, mask slots > pos) or is a sliding-window ring buffer
+    (once pos ≥ S every slot holds an in-window position → no mask; RoPE is
+    relative so absolute phases stay consistent).
+    """
+    B, S, Hkv, D = k_cache.shape
+    H = q.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                   preferred_element_type=F32) * scale
+    idx = jnp.arange(S)[None, :]
+    mask = (idx <= pos[:, None]) | (pos[:, None] >= S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray):
+    """Insert (B, 1, ...) at per-batch position ``pos`` (ring for SWA).
+
+    Lowered as a scatter — in-place with buffer donation, O(B) writes.
+    """
+    B, S = cache.shape[0], cache.shape[1]
+    return cache.at[jnp.arange(B), pos % S].set(new[:, 0].astype(cache.dtype))

@@ -1,0 +1,27 @@
+"""Dense FFN (SwiGLU / GELU) with the paper's quantization hooks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_decl, dense
+
+
+def ffn_decl(d_model: int, d_ff: int, act: str) -> dict:
+    p = {
+        "up": dense_decl(d_model, d_ff, axes=("fsdp", "model")),
+        "down": dense_decl(d_ff, d_model, axes=("model", "fsdp")),
+    }
+    if act == "swiglu":
+        p["gate"] = dense_decl(d_model, d_ff, axes=("fsdp", "model"))
+    return p
+
+
+def ffn(p: dict, x: jnp.ndarray, act: str, quant: str = "none") -> jnp.ndarray:
+    up = dense(p["up"], x, quant)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x, quant)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return dense(p["down"], h, quant)

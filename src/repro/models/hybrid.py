@@ -1,0 +1,165 @@
+"""Zamba2-style hybrid backbone: Mamba2 layers + ONE weight-shared
+attention/FFN block applied every ``shared_attn_every`` layers.
+
+Structure (arXiv:2411.15242, simplified — see DESIGN.md §4):
+  * the shared block consumes concat(hidden, initial_embedding) → d_model
+    (the "global memory" re-injection of Zamba),
+  * every application has its OWN KV cache (weights shared, state not),
+  * the Mamba2 stack is scanned per segment; the python-level segment loop
+    has length n_layers / shared_attn_every (compile-time constant, small).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import rmsnorm, F32
+from .attention import attention, attention_decode, cache_decl
+from .ffn import ffn
+from .ssm import ssm_block, ssm_decode, ssm_cache_decl
+
+
+def _segments(cfg: ArchConfig) -> list[tuple[int, int, bool]]:
+    """[(start_layer, end_layer, shared_after)] covering cfg.n_layers."""
+    k = cfg.shared_attn_every
+    segs = []
+    i = 0
+    while i < cfg.n_layers:
+        j = min(i + k, cfg.n_layers)
+        segs.append((i, j, j - i == k))
+        i = j
+    return segs
+
+
+def _slice_layers(params, i0: int, i1: int):
+    return jax.tree.map(lambda a: a[i0:i1], params["layers0"])
+
+
+def _shared_apply(cfg, p, h, h0, positions, tp, mesh=None, dp_axes=("data",)):
+    gcfg = dataclasses.replace(cfg, attn_type="gqa")
+    x = jnp.concatenate([h, h0], axis=-1) @ p["pre"]["w"]
+    a, cache = attention(gcfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                         positions, tp, mesh, dp_axes)
+    x = x + a
+    x = x + ffn(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.ffn_act,
+                cfg.quant)
+    return h + x, cache
+
+
+def _shared_decode(cfg, p, h, h0, cache, pos, tp):
+    gcfg = dataclasses.replace(cfg, attn_type="gqa")
+    x = jnp.concatenate([h, h0], axis=-1) @ p["pre"]["w"]
+    a, cache = attention_decode(gcfg, p["attn"],
+                                rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                cache, pos, tp)
+    x = x + a
+    x = x + ffn(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.ffn_act,
+                cfg.quant)
+    return h + x, cache
+
+
+def _scan_segment(cfg, seg_params, h, tp, collect, remat, mesh=None, dp_axes=("data",)):
+    from .transformer import _scan_or_unroll
+
+    def body(carry, layer_params):
+        hh = carry
+        y, cache = ssm_block(cfg, layer_params["mixer"],
+                             rmsnorm(layer_params["ln1"], hh, cfg.norm_eps), tp,
+                             mesh, dp_axes)
+        return hh + y, cache if collect else None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n = jax.tree.leaves(seg_params)[0].shape[0]
+    return _scan_or_unroll(body, h, seg_params, n, cfg.scan_layers)
+
+
+def hybrid_forward(cfg: ArchConfig, params, tokens, *, tp=16, mesh=None,
+                   dp_axes=("data",), collect_cache=False):
+    from .transformer import _embed
+
+    h = _embed(cfg, params, tokens)
+    B, S = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h0 = h
+    ssm_caches, shared_caches = [], []
+    for (i0, i1, do_shared) in _segments(cfg):
+        h, caches = _scan_segment(cfg, _slice_layers(params, i0, i1), h, tp,
+                                  collect_cache, cfg.remat == "full",
+                                  mesh, dp_axes)
+        ssm_caches.append(caches)
+        if do_shared:
+            h, sc = _shared_apply(cfg, params["shared"], h, h0, positions, tp,
+                                  mesh, dp_axes)
+            if collect_cache:
+                shared_caches.append(sc)
+    if collect_cache:
+        ssm_caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *ssm_caches)
+        shared_caches = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_caches)
+        caches_out = {"layers": [ssm_caches], "shared": shared_caches}
+    else:
+        caches_out = None
+    return h, jnp.float32(0.0), caches_out
+
+
+def hybrid_prefill(cfg: ArchConfig, params, tokens, *, tp=16, mesh=None,
+                   dp_axes=("data",)):
+    from .transformer import _logits
+
+    h, _, caches = hybrid_forward(cfg, params, tokens, tp=tp, mesh=mesh,
+                                  dp_axes=dp_axes, collect_cache=True)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(cfg, params, h[:, -1:], tp), caches
+
+
+def hybrid_decode(cfg: ArchConfig, params, token, caches, pos, *, tp=16,
+                  mesh=None, dp_axes=("data",)):
+    from .transformer import _embed, _logits
+
+    h = _embed(cfg, params, token)
+    h0 = h
+    new_ssm, new_shared = [], []
+    ssm_all = caches["layers"][0]
+    app = 0
+    for (i0, i1, do_shared) in _segments(cfg):
+        seg_params = _slice_layers(params, i0, i1)
+        seg_cache = jax.tree.map(lambda a: a[i0:i1], ssm_all)
+
+        def body(carry, xs):
+            hh = carry
+            layer_params, cache_in = xs
+            y, c = ssm_decode(cfg, layer_params["mixer"],
+                              rmsnorm(layer_params["ln1"], hh, cfg.norm_eps),
+                              cache_in, tp)
+            return hh + y, c
+
+        from .transformer import _scan_or_unroll
+        h, seg_new = _scan_or_unroll(body, h, (seg_params, seg_cache),
+                                     i1 - i0, cfg.scan_layers)
+        new_ssm.append(seg_new)
+        if do_shared:
+            sc = jax.tree.map(lambda a: a[app], caches["shared"])
+            h, sc = _shared_decode(cfg, params["shared"], h, h0, sc, pos, tp)
+            new_shared.append(sc)
+            app += 1
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(cfg, params, h, tp)
+    return logits, {
+        "layers": [jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm)],
+        "shared": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_shared),
+    }
+
+
+def hybrid_cache_specs(cfg: ArchConfig, batch: int, seq: int, tp: int = 16):
+    n_apps = sum(1 for *_, d in _segments(cfg) if d)
+    ssm_one = ssm_cache_decl(cfg, batch, tp)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        ssm_one)
+    shared_one = cache_decl(cfg, batch, seq, tp)
+    shared = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_apps,) + s.shape, s.dtype), shared_one)
+    return {"layers": [stacked], "shared": shared}

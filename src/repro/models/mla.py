@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (DeepSeek-V2 style; MiniCPM3 uses this).
+
+Prefill caches only the compressed latent c_kv (rank r_kv) plus the shared
+RoPE key — the cache is r_kv + d_rope wide instead of 2·H·D. Decode uses the
+*absorbed* formulation: W_UK is folded into the query and W_UV into the
+output so per-step work is O(S·(r_kv + d_rope)) per head, never expanding
+K/V — the production serving trick, and exactly the kind of
+"compression = hardware win" the paper's Eq. (3) cost objective rewards.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import (rmsnorm_decl, rmsnorm, dense_decl, dense, rope_angles,
+                     apply_rope, blockwise_attention, NEG_INF, F32,
+                     shard_act, head_spec)
+
+
+def mla_decl(cfg: ArchConfig, tp: int = 16) -> dict:
+    m = cfg.mla
+    H = cfg.heads_padded(tp)
+    return {
+        "q_down": dense_decl(cfg.d_model, m.q_lora_rank, axes=("fsdp", None)),
+        "q_norm": rmsnorm_decl(m.q_lora_rank),
+        "q_up": dense_decl(m.q_lora_rank,
+                           H * (m.qk_nope_dim + m.qk_rope_dim),
+                           axes=(None, "model")),
+        "kv_down": dense_decl(cfg.d_model, m.kv_lora_rank + m.qk_rope_dim,
+                              axes=("fsdp", None)),
+        "kv_norm": rmsnorm_decl(m.kv_lora_rank),
+        "k_up": dense_decl(m.kv_lora_rank, H * m.qk_nope_dim,
+                           axes=(None, "model")),
+        "v_up": dense_decl(m.kv_lora_rank, H * m.v_head_dim,
+                           axes=(None, "model")),
+        "wo": dense_decl(H * m.v_head_dim, cfg.d_model, axes=("model", "fsdp")),
+    }
+
+
+def _queries(cfg: ArchConfig, p: dict, x, tp: int):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.heads_padded(tp)
+    cq = rmsnorm(p["q_norm"], dense(p["q_down"], x, cfg.quant), cfg.norm_eps)
+    q = dense(p["q_up"], cq, cfg.quant).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    return q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+
+def _latent(cfg: ArchConfig, p: dict, x):
+    m = cfg.mla
+    ckv = dense(p["kv_down"], x, cfg.quant)
+    c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    return rmsnorm(p["kv_norm"], c, cfg.norm_eps), k_rope
+
+
+def mla_attention(cfg: ArchConfig, p: dict, x, positions, tp: int = 16,
+                  mesh=None, dp_axes=("data",)):
+    """Train/prefill: expand per-head K/V from the latent; blockwise attn.
+
+    Returns (y, cache) with cache = {"c": (B,S,r_kv), "k_rope": (B,S,d_rope)}.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.heads_padded(tp)
+    q_nope, q_rope = _queries(cfg, p, x, tp)
+    c, k_rope = _latent(cfg, p, x)
+
+    ang = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    k_rope = apply_rope(k_rope[:, :, None, :], ang)[:, :, 0]   # shared head
+
+    k_nope = dense(p["k_up"], c, cfg.quant).reshape(B, S, H, m.qk_nope_dim)
+    v = dense(p["v_up"], c, cfg.quant).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], q_rope.shape)], axis=-1)
+    hs = head_spec(mesh, dp_axes, B)
+    if hs is not None:
+        q, k, v = (shard_act(t, mesh, hs) for t in (q, k, v))
+    out = blockwise_attention(q, k, v, causal=True,
+                              block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+                              causal_fold=cfg.causal_fold,
+                              unroll=cfg.attn_unroll)
+    y = dense(p["wo"], out.reshape(B, S, -1), cfg.quant)
+    cache = {"c": c.astype(cfg.kv_cache_dtype),
+             "k_rope": k_rope.astype(cfg.kv_cache_dtype)}
+    return y, cache
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x, cache, pos, tp: int = 16):
+    """Absorbed one-token decode against the latent cache."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.heads_padded(tp)
+    q_nope, q_rope = _queries(cfg, p, x, tp)          # (B,1,H,·)
+    c_new, k_rope_new = _latent(cfg, p, x)            # (B,1,r_kv), (B,1,d_rope)
+    ang = rope_angles(pos[:, None], m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], ang)[:, :, 0]
+
+    S = cache["c"].shape[1]
+    c = cache["c"].at[jnp.arange(B), pos].set(c_new[:, 0].astype(cache["c"].dtype))
+    kr = cache["k_rope"].at[jnp.arange(B), pos].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    # absorb W_UK into q: q_eff (B,H,r_kv) = q_nope · W_UK(head)
+    w_kup = p["k_up"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_kup,
+                       preferred_element_type=F32)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(c.dtype), c,
+                    preferred_element_type=F32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], kr,
+                      preferred_element_type=F32)) * scale
+    mask = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", a.astype(c.dtype), c,
+                     preferred_element_type=F32)      # latent context
+    # absorb W_UV on the way out
+    w_vup = p["v_up"]["w"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype), w_vup,
+                     preferred_element_type=F32)
+    y = dense(p["wo"], out.reshape(B, 1, -1).astype(x.dtype), cfg.quant)
+    return y, {"c": c, "k_rope": kr}
+
+
+def mla_cache_decl(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    m = cfg.mla
+    return {
+        "c": jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank), cfg.kv_cache_dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, seq, m.qk_rope_dim),
+                                       cfg.kv_cache_dtype),
+    }

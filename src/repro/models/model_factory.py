@@ -1,0 +1,177 @@
+"""Public model API: config → Model (init / train_step / prefill / decode /
+input specs / partition specs). ``repro.launch`` drives everything through
+this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec, SHAPES
+from ..sharding.rules import (param_partition_specs, batch_axes,
+                              input_sharding)
+from ..optim.adamw import AdamW, apply_updates, clip_by_global_norm, opt_state_specs
+from ..optim.schedules import cosine_schedule
+from . import transformer as tf
+from .params import materialize, shape_tree, axes_tree, count_params
+from .hybrid import hybrid_cache_specs
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    tp: int = 16
+
+    def __post_init__(self):
+        self.decl = tf.model_decl(self.cfg, self.tp)
+
+    # -- parameters -------------------------------------------------------
+    def init(self, key):
+        return materialize(self.decl, key)
+
+    def param_shapes(self):
+        return shape_tree(self.decl)
+
+    def param_specs(self, serve: bool | None = None):
+        from ..sharding.rules import fix_divisibility
+
+        if serve is None:
+            serve = self.cfg.serve_tp_only
+        specs = param_partition_specs(axes_tree(self.decl), serve=serve)
+        return fix_divisibility(specs, self.param_shapes())
+
+    def n_params(self) -> int:
+        return count_params(self.decl)
+
+    # -- steps -------------------------------------------------------------
+    def loss_fn(self, params, batch, mesh=None, multi_pod=False):
+        return tf.lm_loss(self.cfg, params, batch, tp=self.tp, mesh=mesh,
+                          dp_axes=batch_axes(multi_pod))
+
+    def make_train_step(self, mesh=None, multi_pod=False,
+                        optimizer: Optional[AdamW] = None,
+                        clip_norm: float = 1.0):
+        cfg = self.cfg
+        opt = optimizer or AdamW(
+            learning_rate=cosine_schedule(3e-4, 200, 10000),
+            state_dtype=cfg.opt_state_dtype)
+
+        def train_step(state, batch):
+            def lf(p):
+                return self.loss_fn(p, batch, mesh, multi_pod)
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                state["params"])
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            updates, opt_state = opt.update(grads, state["opt"], state["params"])
+            params = apply_updates(state["params"], updates)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                           step=state["step"] + 1)
+            return {"params": params, "opt": opt_state,
+                    "step": state["step"] + 1}, metrics
+
+        return train_step, opt
+
+    def init_train_state(self, key, optimizer: Optional[AdamW] = None):
+        opt = optimizer or AdamW(state_dtype=self.cfg.opt_state_dtype)
+        params = self.init(key)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def train_state_specs(self):
+        ps = self.param_specs()
+        return {"params": ps, "opt": opt_state_specs(ps), "step": P()}
+
+    def make_prefill(self, mesh=None, multi_pod=False):
+        def prefill(params, batch):
+            return tf.prefill(self.cfg, params, batch["tokens"],
+                              positions=batch.get("positions"),
+                              img_embeds=batch.get("img_embeds"),
+                              tp=self.tp, mesh=mesh,
+                              dp_axes=batch_axes(multi_pod))
+        return prefill
+
+    def make_decode_step(self, mesh=None, multi_pod=False):
+        def decode(params, token, caches, pos):
+            return tf.decode_step(self.cfg, params, token, caches, pos,
+                                  tp=self.tp, mesh=mesh,
+                                  dp_axes=batch_axes(multi_pod))
+        return decode
+
+    # -- input specs for the dry-run ---------------------------------------
+    def input_specs(self, shape: ShapeSpec, multi_pod: bool = False, mesh=None):
+        """Returns (args, shardings) pytrees of ShapeDtypeStruct / PartitionSpec
+        for the step function matching shape.kind (DESIGN.md dry-run contract).
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sh = input_sharding(shape.kind, multi_pod, batch=B, mesh=mesh)
+        i32 = jnp.int32
+        K = cfg.n_codebooks
+
+        def tok(shape_, key):
+            return jax.ShapeDtypeStruct(shape_, i32), sh[key]
+
+        if shape.kind in ("train", "prefill"):
+            if K > 1:
+                args = {"tokens": jax.ShapeDtypeStruct((B, K, S), i32),
+                        "labels": jax.ShapeDtypeStruct((B, K, S), i32)}
+                specs = {"tokens": sh["tokens_mc"], "labels": sh["labels_mc"]}
+            else:
+                args = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                        "labels": jax.ShapeDtypeStruct((B, S), i32)}
+                specs = {"tokens": sh["tokens"], "labels": sh["labels"]}
+            if cfg.n_img_tokens:
+                args["img_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_img_tokens, cfg.d_model), cfg.param_dtype)
+                args["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+                specs["img_embeds"] = sh["img_embeds"]
+                specs["positions"] = sh["positions3"]
+            if shape.kind == "prefill":
+                return args, specs
+            return args, specs
+
+        # decode: (token, caches, pos)
+        token_shape = (B, K, 1) if K > 1 else (B, 1)
+        token = jax.ShapeDtypeStruct(token_shape, i32)
+        token_spec = sh["tokens_mc"] if K > 1 else sh["tokens"]
+        pos = jax.ShapeDtypeStruct((B,), i32)
+        caches, cache_specs_tree = self.cache_specs(B, S, multi_pod, mesh)
+        return ({"token": token, "caches": caches, "pos": pos},
+                {"token": token_spec, "caches": cache_specs_tree,
+                 "pos": sh["pos"]})
+
+    def cache_specs(self, batch: int, seq: int, multi_pod: bool = False,
+                    mesh=None):
+        cfg = self.cfg
+        sh = input_sharding("decode", multi_pod, batch=batch, mesh=mesh)
+        if cfg.shared_attn_every:
+            shapes = hybrid_cache_specs(cfg, batch, seq, self.tp)
+            kv_spec = (P(None, sh["dp_spec"], None, "model", None)
+                       if sh["dp_spec"] else P(None, None, "data", "model", None))
+            specs = {
+                "layers": [{"ssm": sh["ssm_cache"], "conv": sh["conv_cache"]}],
+                "shared": {"k": kv_spec, "v": kv_spec},
+            }
+            return shapes, specs
+
+        shapes = tf.cache_specs(cfg, batch, seq, self.tp)
+        if cfg.attn_type == "mla":
+            leaf_spec = {"c": sh["mla_cache"], "k_rope": sh["mla_cache"]}
+        elif cfg.attn_type == "gqa":
+            leaf_spec = {k: sh["kv_cache"] for k in shapes["layers"][0]}
+        else:
+            leaf_spec = {"ssm": sh["ssm_cache"], "conv": sh["conv_cache"]}
+        specs = {"layers": [leaf_spec for _ in shapes["layers"]]}
+        return shapes, specs
+
+
+def build_model(cfg: ArchConfig, tp: int = 16) -> Model:
+    return Model(cfg, tp)

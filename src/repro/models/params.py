@@ -1,0 +1,97 @@
+"""Declarative parameter trees (flax is not available in this container).
+
+A model is described once as a tree of :class:`ParamDecl` leaves; from that
+single description we derive
+  * materialised parameter arrays (``materialize``),
+  * ``PartitionSpec`` trees for the production mesh (``spec_tree``),
+  * ``ShapeDtypeStruct`` trees for allocation-free dry-runs (``shape_tree``),
+  * parameter counts (``count_params``).
+
+Logical sharding axes used by the zoo (mapped to mesh axes in
+``repro.sharding.rules``):
+  "fsdp"   — ZeRO-3 style weight sharding over the data axis,
+  "model"  — tensor parallelism (vocab, q/kv heads, d_ff, conv channels),
+  "expert" — MoE expert dimension (kept unsharded: experts loop, d_ff splits),
+  None     — replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    init: str = "normal"                  # normal | zeros | ones | pow2
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+    quantizable: bool = False             # may be stored as packed pow2 uint8
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _init_one(decl: ParamDecl, key):
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, decl.dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, decl.dtype)
+    std = decl.scale
+    if decl.init in ("fan_in", "pow2") and len(decl.shape) >= 2:
+        std = 1.0 / math.sqrt(decl.shape[-2])
+    w = jax.random.normal(key, decl.shape, jnp.float32) * std
+    if decl.init == "pow2":                  # packed serving storage
+        from ..core.quantize import pow2_quantize
+
+        return pow2_quantize(w)
+    return w.astype(decl.dtype)
+
+
+def quantize_storage(tree):
+    """Switch every quantizable decl to packed pow2 uint8 storage — the
+    paper's multiplier-less weight format as the at-rest/serving layout."""
+    def one(d):
+        if d.quantizable and len(d.shape) >= 2:
+            return dataclasses.replace(d, dtype=jnp.uint8, init="pow2")
+        return d
+
+    return jax.tree.map(one, tree, is_leaf=is_decl)
+
+
+def materialize(tree, key):
+    """Decl tree → parameter arrays (deterministic key split per leaf)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def shape_tree(tree):
+    """Decl tree → ShapeDtypeStruct tree (no allocation, for .lower())."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree, is_leaf=is_decl)
+
+
+def axes_tree(tree):
+    """Decl tree → logical-axes tuples (consumed by sharding.rules)."""
+    return jax.tree.map(lambda d: d.axes, tree, is_leaf=is_decl)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(tree, is_leaf=is_decl))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

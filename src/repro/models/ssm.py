@@ -1,0 +1,216 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD decomposition:
+  * intra-chunk: quadratic "attention-like" term with decay kernel
+    L[i,j] = exp(Σ_{j<t≤i} dtA_t) (causal within a chunk of length Q),
+  * inter-chunk: each chunk emits a state contribution; states are carried
+    across chunks by a (short) sequential scan — #chunks = S/Q.
+Decode keeps the O(1) recurrent state h (B, H, P, N):
+  h ← exp(dtA)·h + dt·B ⊗ x;  y = C·h + D·x.
+
+Heads are padded to the TP degree (zero-weight heads — output exact) like
+attention heads. ngroups=1: B/C shared across heads (replicated over TP).
+
+The Pallas kernel twin of the chunk scan lives in repro.kernels.ssd_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDecl
+from .common import rmsnorm_decl, rmsnorm, dense_decl, dense, F32
+
+
+def _dims(cfg: ArchConfig, tp: int = 16):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    nheads = d_inner // s.headdim
+    nheads_pad = ((nheads + tp - 1) // tp) * tp
+    d_inner_pad = nheads_pad * s.headdim
+    conv_dim = d_inner_pad + 2 * s.ngroups * s.d_state
+    return d_inner_pad, nheads_pad, conv_dim
+
+
+def ssm_decl(cfg: ArchConfig, tp: int = 16) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg, tp)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.d_state + nheads
+    return {
+        "in_proj": dense_decl(cfg.d_model, d_in_proj, axes=("fsdp", "model")),
+        "conv_w": {"w": ParamDecl((s.conv_kernel, conv_dim), (None, "model"),
+                                  init="fan_in")},
+        "conv_b": {"w": ParamDecl((conv_dim,), ("model",), init="zeros")},
+        "A_log": {"w": ParamDecl((nheads,), ("model",), init="zeros", dtype=F32)},
+        "dt_bias": {"w": ParamDecl((nheads,), ("model",), init="zeros", dtype=F32)},
+        "D": {"w": ParamDecl((nheads,), ("model",), init="ones", dtype=F32)},
+        "norm": rmsnorm_decl(d_inner),
+        "out_proj": dense_decl(d_inner, cfg.d_model, axes=("model", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jnp.ndarray, tp: int):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg, tp)
+    gz = s.ngroups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gz], axis=-1)
+    return z, xbc, dt, d_inner, nheads, gz
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv1d, kernel K. xbc: (B, S, C); w: (K, C).
+
+    Returns (out, new_conv_state) where conv_state carries the last K−1
+    inputs for decode."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xbc[:, : K - 1])
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)            # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, S, H, P); dt: (b, S, H); A: (H,) (negative); B, C: (b, S, G, N).
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(b, nc, chunk, H, Pd)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, G, N)
+    Cc = C.reshape(b, nc, chunk, G, N)
+
+    dA = dtc * A[None, None, None, :]                   # (b,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+
+    # intra-chunk (diag block): L[i,j] = exp(cum_i − cum_j) · causal
+    li = cum[:, :, :, None, :]                          # (b,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]                          # (b,nc,1,Q,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(li - lj), 0.0)        # (b,nc,Q,Q,H)
+    # scores: C_i · B_j per group, broadcast over heads in group
+    # (bf16 MXU inputs, f32 accumulation — same policy as attention)
+    s_gb = jnp.einsum("bnqgN,bnkgN->bnqkg", Cc, Bc,
+                      preferred_element_type=F32)
+    s = jnp.repeat(s_gb, rep, axis=-1)                  # (b,nc,Q,Q,H)
+    sL = (s * L * dtc[:, :, None, :, :]).astype(xc.dtype)
+    y_diag = jnp.einsum("bnqkh,bnkhp->bnqhp", sL, xc,
+                        preferred_element_type=F32)
+
+    # chunk state contribution: Σ_j exp(cum_end − cum_j)·dt_j·B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (b,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (b,nc,Q,H,N)
+    wB = ((decay_to_end * dtc)[..., None] * Bh.astype(F32)).astype(xc.dtype)
+    state_c = jnp.einsum("bnkhN,bnkhp->bnhpN", wB, xc,
+                         preferred_element_type=F32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (b,nc,H)
+
+    # inter-chunk sequential scan over nc states
+    def scan_fn(h, inp):
+        sc, dec = inp                                    # (b,H,P,N), (b,H)
+        h_new = h * dec[:, :, None, None] + sc
+        return h_new, h                                  # emit state *before* chunk
+
+    h0 = jnp.zeros((b, H, Pd, N), F32)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (b,nc,H,P,N)
+
+    # inter-chunk output: y += C_i · exp(cum_i) · h_prev
+    Ch = jnp.repeat(Cc, rep, axis=3)                     # (b,nc,Q,H,N)
+    wC = (Ch.astype(F32) * jnp.exp(cum)[..., None]).astype(xc.dtype)
+    y_inter = jnp.einsum("bnqhN,bnhpN->bnqhp", wC,
+                         h_prev.astype(xc.dtype),
+                         preferred_element_type=F32)
+    y = (y_diag + y_inter).reshape(b, S, H, Pd)
+    return y, hT
+
+
+def ssm_block(cfg: ArchConfig, p: dict, x: jnp.ndarray, tp: int = 16,
+              mesh=None, dp_axes=("data",)):
+    """Train/prefill Mamba2 block. x: (B, S, d_model) → (y, cache)."""
+    from .common import shard_act, head_spec
+
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    zxbcdt = dense(p["in_proj"], x, cfg.quant)
+    z, xbc, dt, d_inner, nheads, gz = _split_proj(cfg, zxbcdt, tp)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"]["w"], p["conv_b"]["w"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + gz], axis=-1)
+
+    H, P, G, N = nheads, s.headdim, s.ngroups, s.d_state
+    xh = xs.reshape(B_, S, H, P)
+    hs = head_spec(mesh, dp_axes, B_)
+    if hs is not None:
+        # pin heads to the model axis: the chunk scan otherwise loses the
+        # sharding (same GSPMD propagation failure as attention — §Perf)
+        xh = shard_act(xh, mesh, hs)
+    Bm = Bmat.reshape(B_, S, G, N)
+    Cm = Cmat.reshape(B_, S, G, N)
+    A = -jnp.exp(p["A_log"]["w"])                        # (H,) negative
+    dtv = jax.nn.softplus(dt.astype(F32) + p["dt_bias"]["w"])
+
+    pad = (-S) % s.chunk
+    if pad:
+        z3 = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, Bm, Cm, dtv = z3(xh), z3(Bm), z3(Cm), z3(dtv)
+    y, hT = _ssd_chunked(xh, dtv, A, Bm, Cm, s.chunk)
+    y = y[:, :S]
+    y = y + p["D"]["w"][None, None, :, None] * xs.reshape(B_, S, H, P).astype(F32)
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, cfg.quant)
+    cache = {"ssm": hT.astype(F32), "conv": conv_state.astype(x.dtype)}
+    return out, cache
+
+
+def ssm_decode(cfg: ArchConfig, p: dict, x: jnp.ndarray, cache: dict,
+               tp: int = 16):
+    """One-token recurrent update. x: (B, 1, d_model)."""
+    s = cfg.ssm
+    B_ = x.shape[0]
+    zxbcdt = dense(p["in_proj"], x, cfg.quant)
+    z, xbc, dt, d_inner, nheads, gz = _split_proj(cfg, zxbcdt, tp)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"]["w"], p["conv_b"]["w"],
+                                   cache["conv"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + gz], axis=-1)
+
+    H, P, G, N = nheads, s.headdim, s.ngroups, s.d_state
+    rep = H // G
+    xh = xs.reshape(B_, H, P).astype(F32)
+    Bm = jnp.repeat(Bmat.reshape(B_, G, N), rep, axis=1).astype(F32)
+    Cm = jnp.repeat(Cmat.reshape(B_, G, N), rep, axis=1).astype(F32)
+    A = -jnp.exp(p["A_log"]["w"])
+    dtv = jax.nn.softplus(dt.reshape(B_, H).astype(F32) + p["dt_bias"]["w"])
+
+    h = cache["ssm"]                                     # (B,H,P,N)
+    decay = jnp.exp(dtv * A[None, :])                    # (B,H)
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhN,bhp->bhpN", dtv, Bm, xh)
+    y = jnp.einsum("bhN,bhpN->bhp", Cm, h) + p["D"]["w"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, cfg.quant)
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def ssm_cache_decl(cfg: ArchConfig, batch: int, tp: int = 16) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg, tp)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, nheads, s.headdim, s.d_state), F32),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, conv_dim),
+                                     jnp.bfloat16),
+    }

@@ -1,0 +1,344 @@
+"""Decoder-only LM assembly for all assigned architectures.
+
+One generic stack covers the zoo via config:
+  * layer groups: every ``moe.every_k_layers`` layers the FFN is MoE
+    (Mixtral: every layer; Llama4: alternating dense/MoE + shared expert),
+  * mixer per family: GQA attention, MLA, or Mamba2 SSD,
+  * Zamba2 hybrid: Mamba2 backbone + ONE shared attention/FFN block invoked
+    every ``shared_attn_every`` layers on concat(hidden, embeddings),
+  * Qwen2-VL: stubbed patch embeddings merged into the prefix + M-RoPE,
+  * MusicGen: ``n_codebooks`` parallel token streams (summed embeddings,
+    one head per codebook).
+
+Layers are scanned (`lax.scan` over stacked params) with configurable remat —
+compile time and HLO size stay flat in depth, which the 512-device dry-run
+depends on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDecl, materialize, shape_tree, axes_tree, count_params
+from .common import rmsnorm_decl, rmsnorm, F32
+from .attention import attn_decl, attention, attention_decode, cache_decl
+from .mla import mla_decl, mla_attention, mla_decode, mla_cache_decl
+from .ffn import ffn_decl, ffn
+from .moe import moe_decl, moe_ffn
+from .ssm import ssm_decl, ssm_block, ssm_decode, ssm_cache_decl
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def _stack(tree, n: int):
+    """Prepend a layer axis to every decl in ``tree``."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      axes=(None,) + d.axes),
+        tree, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def _mixer_decl(cfg: ArchConfig, tp: int) -> dict:
+    if cfg.attn_type == "mla":
+        return mla_decl(cfg, tp)
+    if cfg.attn_type == "gqa":
+        return attn_decl(cfg, tp)
+    return ssm_decl(cfg, tp)          # attention-free (mamba2 / zamba2 body)
+
+
+def _layer_decl(cfg: ArchConfig, moe_layer: bool, tp: int) -> dict:
+    d = {"ln1": rmsnorm_decl(cfg.d_model), "mixer": _mixer_decl(cfg, tp)}
+    if cfg.attn_type != "none":       # ssm blocks have no separate FFN
+        d["ln2"] = rmsnorm_decl(cfg.d_model)
+        d["ffn"] = moe_decl(cfg) if moe_layer else ffn_decl(
+            cfg.d_model, cfg.d_ff, cfg.ffn_act)
+    return d
+
+
+def model_decl(cfg: ArchConfig, tp: int = 16) -> dict:
+    Vp = cfg.vocab_padded(tp)
+    every = cfg.moe.every_k_layers if cfg.moe else 1
+    n_groups = cfg.n_layers // every
+    decl: dict = {
+        "embed": {"w": ParamDecl((cfg.n_codebooks, Vp, cfg.d_model),
+                                 (None, "model", "fsdp"), init="normal")},
+        "final_norm": rmsnorm_decl(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        decl["lm_head"] = {"w": ParamDecl(
+            (cfg.d_model, cfg.n_codebooks * Vp), ("fsdp", "model"),
+            init="fan_in", quantizable=True)}
+    # layer groups: group = [dense × (every−1), moe × 1] (or plain dense)
+    for i in range(every):
+        moe_layer = cfg.moe is not None and i == every - 1
+        decl[f"layers{i}"] = _stack(_layer_decl(cfg, moe_layer, tp), n_groups)
+    if cfg.shared_attn_every:
+        # Zamba2-style shared block on concat(hidden, embed) → d_model
+        decl["shared"] = {
+            "pre": {"w": ParamDecl((2 * cfg.d_model, cfg.d_model),
+                                   ("fsdp", "model"), init="fan_in")},
+            "ln1": rmsnorm_decl(cfg.d_model),
+            "attn": attn_decl(dataclasses.replace(cfg, attn_type="gqa"), tp),
+            "ln2": rmsnorm_decl(cfg.d_model),
+            "ffn": ffn_decl(cfg.d_model, cfg.d_ff, cfg.ffn_act),
+        }
+    if cfg.quant == "pow2" and cfg.quant_storage:
+        from .params import quantize_storage
+
+        decl = quantize_storage(decl)
+    return decl
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params, tokens, img_embeds=None):
+    """tokens: (B, S) or (B, K, S) for multi-codebook. → (B, S, d)."""
+    w = params["embed"]["w"]
+    if cfg.n_codebooks > 1:
+        h = sum(jnp.take(w[k], tokens[:, k], axis=0)
+                for k in range(cfg.n_codebooks))
+    else:
+        h = jnp.take(w[0], tokens, axis=0)
+    if img_embeds is not None:
+        n = img_embeds.shape[1]
+        h = jnp.concatenate([img_embeds.astype(h.dtype), h[:, n:]], axis=1)
+    return h
+
+
+def _logits(cfg: ArchConfig, params, h, tp: int = 16):
+    from .common import maybe_dequant
+
+    Vp = cfg.vocab_padded(tp)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"].reshape(-1, cfg.d_model).T   # (d, K·Vp)
+    else:
+        w = maybe_dequant(params["lm_head"]["w"], h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, w,
+                        preferred_element_type=F32)
+    if cfg.n_codebooks > 1:
+        B, S, _ = logits.shape
+        return logits.reshape(B, S, cfg.n_codebooks, Vp)
+    return logits
+
+
+def _mixer_apply(cfg, p, h, positions, tp, mesh, dp_axes):
+    if cfg.attn_type == "mla":
+        return mla_attention(cfg, p, h, positions, tp, mesh, dp_axes)
+    if cfg.attn_type == "gqa":
+        return attention(cfg, p, h, positions, tp, mesh, dp_axes)
+    return ssm_block(cfg, p, h, tp, mesh, dp_axes)
+
+
+def _mixer_decode(cfg, p, h, cache, pos, tp):
+    if cfg.attn_type == "mla":
+        return mla_decode(cfg, p, h, cache, pos, tp)
+    if cfg.attn_type == "gqa":
+        return attention_decode(cfg, p, h, cache, pos, tp)
+    return ssm_decode(cfg, p, h, cache, tp)
+
+
+def _ffn_apply(cfg, p, h, moe_layer, mesh, dp_axes):
+    if moe_layer:
+        return moe_ffn(cfg, p, h, mesh, dp_axes)
+    return ffn(p, h, cfg.ffn_act, cfg.quant), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Stacked forward (scan over layer groups). The Zamba2 hybrid (shared attn
+# block with per-application caches) lives in repro.models.hybrid.
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params, tokens, *, positions=None,
+            img_embeds=None, tp: int = 16, mesh=None, dp_axes=("data",),
+            collect_cache: bool = False):
+    """Full-sequence forward. Returns (hidden, aux_loss, caches|None)."""
+    if cfg.shared_attn_every:
+        from .hybrid import hybrid_forward
+        return hybrid_forward(cfg, params, tokens, tp=tp, mesh=mesh,
+                              dp_axes=dp_axes, collect_cache=collect_cache)
+    h = _embed(cfg, params, tokens, img_embeds)
+    B, S = h.shape[0], h.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    every = cfg.moe.every_k_layers if cfg.moe else 1
+    n_groups = cfg.n_layers // every
+
+    def group_body(carry, xs):
+        h, aux = carry
+        layer_params, gidx = xs
+        caches = []
+        for i in range(every):
+            p = layer_params[i]
+            moe_layer = cfg.moe is not None and i == every - 1
+            mix_in = rmsnorm(p["ln1"], h, cfg.norm_eps)
+            y, cache = _mixer_apply(cfg, p["mixer"], mix_in, positions, tp,
+                                    mesh, dp_axes)
+            h = h + y
+            caches.append(cache)
+            if cfg.attn_type != "none":
+                f, a = _ffn_apply(cfg, p["ffn"],
+                                  rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                  moe_layer, mesh, dp_axes)
+                h = h + f
+                aux = aux + a
+        return (h, aux), caches if collect_cache else None
+
+    body = group_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    layer_stacks = [params[f"layers{i}"] for i in range(every)]
+    xs = (layer_stacks, jnp.arange(n_groups))
+    (h, aux), caches = _scan_or_unroll(body, (h, jnp.float32(0.0)), xs,
+                                       n_groups, cfg.scan_layers)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux / max(cfg.n_layers, 1), caches
+
+
+def _scan_or_unroll(body, init, xs, n: int, use_scan: bool):
+    """lax.scan, or a python unroll with identical semantics.
+
+    The unroll exists for exact HLO cost accounting: XLA's cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so the dry-run
+    derives roofline terms from small unrolled lowerings and extrapolates
+    (launch/dryrun.py)."""
+    if use_scan:
+        return jax.lax.scan(body, init, xs)
+    carry = init
+    ys = []
+    for g in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[g], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, ys
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, tp: int = 16, mesh=None,
+            dp_axes=("data",)):
+    """Cross-entropy with chunked logits (never materialises (B,S,V))."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux, _ = forward(cfg, params, tokens,
+                        positions=batch.get("positions"),
+                        img_embeds=batch.get("img_embeds"),
+                        tp=tp, mesh=mesh, dp_axes=dp_axes)
+    # labels → (B, S) or (B, S, K): one gold index per logits row
+    if cfg.n_codebooks > 1:
+        labels = labels.transpose(0, 2, 1)               # (B, K, S) → (B, S, K)
+
+    def ce(h_c, labels_c):
+        logits = _logits(cfg, params, h_c, tp)           # (B,C,V) | (B,C,K,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels_c[..., None], -1)[..., 0]
+        return jnp.sum(logz - gold), logz.size
+
+    B, S = labels.shape[0], labels.shape[1]
+    if cfg.loss_chunk and S > cfg.loss_chunk:
+        nc = S // cfg.loss_chunk
+        hs = jnp.moveaxis(h.reshape(B, nc, cfg.loss_chunk, h.shape[-1]), 1, 0)
+        ls = jnp.moveaxis(
+            labels.reshape((B, nc, cfg.loss_chunk) + labels.shape[2:]), 1, 0)
+
+        def chunk_body(acc, xs):
+            s, n = ce(*xs)
+            return (acc[0] + s, acc[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_body, (jnp.float32(0.0), jnp.int32(0)), (hs, ls))
+        loss = tot / cnt
+    else:
+        s, n = ce(h, labels)
+        loss = s / n
+    return loss + 0.01 * aux, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _group_cache_decl(cfg: ArchConfig, batch: int, seq: int, tp: int):
+    if cfg.attn_type == "mla":
+        base = mla_cache_decl(cfg, batch, seq)
+    elif cfg.attn_type == "gqa":
+        base = cache_decl(cfg, batch, seq, tp)
+    else:
+        base = ssm_cache_decl(cfg, batch, tp)
+    return base
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int, tp: int = 16):
+    """ShapeDtypeStruct pytree of the full-model cache (stacked per group)."""
+    every = cfg.moe.every_k_layers if cfg.moe else 1
+    n_groups = cfg.n_layers // every
+    one = [_group_cache_decl(cfg, batch, seq, tp) for _ in range(every)]
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype), one)
+    out = {"layers": stacked}
+    if cfg.shared_attn_every:
+        out["shared"] = cache_decl(cfg, batch, seq, tp)
+    return out
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, positions=None,
+            img_embeds=None, tp: int = 16, mesh=None, dp_axes=("data",)):
+    """Full-sequence forward that RETURNS the cache + last-position logits."""
+    if cfg.shared_attn_every:
+        from .hybrid import hybrid_prefill
+        return hybrid_prefill(cfg, params, tokens, tp=tp, mesh=mesh,
+                              dp_axes=dp_axes)
+    h, _, caches = forward(cfg, params, tokens, positions=positions,
+                           img_embeds=img_embeds, tp=tp, mesh=mesh,
+                           dp_axes=dp_axes, collect_cache=True)
+    logits = _logits(cfg, params, h[:, -1:], tp)
+    return logits, {"layers": caches}
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, pos, *,
+                tp: int = 16, mesh=None, dp_axes=("data",)):
+    """One decode step. token: (B,1) or (B,K,1); pos: (B,) absolute index."""
+    if cfg.shared_attn_every:
+        from .hybrid import hybrid_decode
+        return hybrid_decode(cfg, params, token, caches, pos, tp=tp,
+                             mesh=mesh, dp_axes=dp_axes)
+    h = _embed(cfg, params, token)
+    every = cfg.moe.every_k_layers if cfg.moe else 1
+    n_groups = cfg.n_layers // every
+
+    def group_body(carry, xs):
+        h, aux = carry
+        layer_params, cache_in, gidx = xs
+        new_caches = []
+        for i in range(every):
+            p = layer_params[i]
+            mix_in = rmsnorm(p["ln1"], h, cfg.norm_eps)
+            y, c = _mixer_decode(cfg, p["mixer"], mix_in, cache_in[i], pos, tp)
+            h = h + y
+            new_caches.append(c)
+            if cfg.attn_type != "none":
+                moe_layer = cfg.moe is not None and i == every - 1
+                f, a = _ffn_apply(cfg, p["ffn"],
+                                  rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                  moe_layer, mesh, dp_axes)
+                h = h + f
+                aux = aux + a
+        return (h, aux), new_caches
+
+    layer_stacks = [params[f"layers{i}"] for i in range(every)]
+    (h, _), new_layer_caches = _scan_or_unroll(
+        group_body, (h, jnp.float32(0.0)),
+        (layer_stacks, caches["layers"], jnp.arange(n_groups)),
+        n_groups, cfg.scan_layers)
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(cfg, params, h, tp)
+    return logits, {"layers": new_layer_caches}

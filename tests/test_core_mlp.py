@@ -1,0 +1,47 @@
+"""Approximate-MLP forward: bit-exact vs the pure-python hardware simulator."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import MLPTopology, GenomeSpec
+from repro.core.mlp import mlp_forward, population_accuracy, accuracy
+from repro.core.quantize import quantize_inputs, qrelu
+from repro.core.hdl import evaluate_genome_python
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_forward_matches_python_sim(seed):
+    topo = MLPTopology((6, 4, 3))
+    spec = GenomeSpec(topo)
+    key = jax.random.PRNGKey(seed)
+    g = spec.random(key, 1)[0]
+    x = jax.random.randint(jax.random.PRNGKey(seed + 1), (9, 6), 0, 16)
+    got = np.asarray(mlp_forward(spec, g, x))
+    want = evaluate_genome_python(spec, np.asarray(g), np.asarray(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qrelu_bounds():
+    acc = jnp.asarray([-5, 0, 100, 10_000, 255 << 3])
+    out = qrelu(acc, jnp.int32(3), 8)
+    assert int(out.min()) >= 0 and int(out.max()) <= 255
+
+
+def test_quantize_inputs_range():
+    x = jnp.linspace(0, 1, 17)
+    q = quantize_inputs(x, 4)
+    assert int(q.min()) == 0 and int(q.max()) == 15
+
+
+def test_population_accuracy_matches_single(bc_spec, bc_dataset, key):
+    pop = bc_spec.random(key, 5)
+    x01 = jnp.asarray(bc_dataset.x_test)
+    labels = jnp.asarray(bc_dataset.y_test)
+    xi = quantize_inputs(x01, bc_spec.topo.input_bits)
+    pop_acc = population_accuracy(bc_spec, pop, xi, labels)
+    for i in range(5):
+        single = accuracy(bc_spec, pop[i], x01, labels)
+        assert abs(float(pop_acc[i]) - float(single)) < 1e-6

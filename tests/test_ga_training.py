@@ -1,0 +1,63 @@
+"""GA-based hardware-aware training: end-to-end behaviour (paper §IV/§V)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (GAConfig, GATrainer, hypervolume_2d, calibrated_seeds,
+                        exact_bespoke_baseline, best_within_loss)
+from repro.core.genome import MLPTopology, GenomeSpec
+
+
+@pytest.fixture(scope="module")
+def trained(bc_dataset, bc_float):
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    spec = GenomeSpec(topo)
+    seeds = calibrated_seeds(spec, bc_float, ds.x_train)
+    cfg = GAConfig(pop_size=64, generations=30, seed=1)
+    tr = GATrainer(topo, ds.x_train, ds.y_train, cfg,
+                   baseline_acc=bc_float.train_acc, doping_seeds=seeds)
+    state, hist = tr.run()
+    return tr, state
+
+
+def test_hypervolume_improves(bc_dataset, bc_float, trained):
+    ds = bc_dataset
+    tr, state = trained
+    ref = (1.0, 2000.0)
+    hv_final = hypervolume_2d(np.asarray(state.obj), ref)
+    s0 = tr.init_state()
+    hv_init = hypervolume_2d(np.asarray(s0.obj), ref)
+    assert hv_final > hv_init
+
+
+def test_front_is_nondominated(trained):
+    tr, state = trained
+    front = tr.front(state)["objectives"]
+    for i in range(len(front)):
+        for j in range(len(front)):
+            if i == j:
+                continue
+            assert not (np.all(front[j] <= front[i])
+                        and np.any(front[j] < front[i]))
+
+
+def test_paper_headline_claim_smoke(bc_dataset, bc_float, trained):
+    """≥5× area reduction within 5% accuracy loss (Table II, smoke scale)."""
+    ds = bc_dataset
+    tr, state = trained
+    bb = exact_bespoke_baseline(MLPTopology(ds.topology), bc_float,
+                                ds.x_test, ds.y_test)
+    front = tr.front(state)
+    idx = best_within_loss(front["objectives"], 1 - bb.accuracy, 0.05)
+    assert idx is not None, "no solution within 5% of baseline accuracy"
+    area = front["objectives"][idx, 1]
+    assert bb.fa_count / area >= 5.0, (bb.fa_count, area)
+
+
+def test_feasibility_bound_respected(trained):
+    tr, state = trained
+    # all rank-0 feasible solutions obey the 10% accuracy-loss bound
+    feas = np.asarray(state.viol) <= 0
+    errs = np.asarray(state.obj)[feas, 0]
+    assert (errs <= (1 - tr.baseline_acc) + tr.cfg.max_acc_loss + 1e-6).all()

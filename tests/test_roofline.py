@@ -1,0 +1,71 @@
+"""Roofline analysis: HLO collective parsing, extrapolation, conventions."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import (parse_collectives, _shape_bytes,
+                                     analyze_compiled, V5E,
+                                     extrapolate_depth as _extrapolate)
+
+
+SAMPLE_HLO = """
+HloModule test
+  %x = bf16[2048,512]{1,0} parameter(0)
+  %ar = bf16[2048,512]{1,0} all-reduce(bf16[2048,512]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[128,64]{1,0} all-gather(f32[16,64]{1,0} %y), dimensions={0}, replica_groups={{0,256}}
+  %rs = f32[16,64]{1,0} reduce-scatter(f32[128,64]{1,0} %z), dimensions={0}
+  %cp-start = bf16[32]{0} collective-permute-start(bf16[32]{0} %w), source_target_pairs={{0,1}}
+  %cp-done = bf16[32]{0} collective-permute-done(bf16[32]{0} %cp-start)
+  %f = f32[4]{0} fusion(f32[4]{0} %a), kind=kLoop
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[2048,512]") == 2048 * 512 * 2
+    assert _shape_bytes("f32[16,64]{1,0}") == 16 * 64 * 4
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_parse_collectives_kinds_and_bytes():
+    ops = parse_collectives(SAMPLE_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "collective-permute",
+                     "reduce-scatter"]
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.bytes == 2048 * 512 * 2
+    # -done line skipped
+    assert sum(o.kind == "collective-permute" for o in ops) == 1
+
+
+def test_cross_pod_detection():
+    ops = parse_collectives(SAMPLE_HLO, pod_size=256)
+    ag = next(o for o in ops if o.kind == "all-gather")
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ag.cross_pod          # groups {0,256} span pods
+    assert not ar.cross_pod      # groups {0..3} inside pod 0
+
+
+def test_extrapolation_exact_for_linear():
+    a = {"flops": 10.0, "hbm_bytes": 100.0}
+    b = {"flops": 16.0, "hbm_bytes": 130.0}
+    out = _extrapolate(a, b, 2, 4, 10)
+    # slope = (16-10)/(4-2) = 3; full = 10 + 3*(10-2) = 34
+    assert out["flops"] == 34.0
+    assert out["hbm_bytes"] == 100 + 15 * 8
+
+
+def test_cost_analysis_is_per_device_convention():
+    """Sharded lowering reports ≈ 1/n of the unsharded FLOPs (the dry-run's
+    per-device convention). Single CPU device → shard over a 1-dev mesh is a
+    no-op, so here we just check cost_analysis exposes flops at all; the
+    16-way check runs in test_distributed.py under 8 fake devices."""
+    x = jnp.ones((256, 256), jnp.float32)
+
+    def f(a):
+        return a @ a
+
+    c = jax.jit(f).lower(x).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    assert c.get("flops", 0) >= 2 * 256**3 * 0.9
