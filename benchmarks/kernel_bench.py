@@ -1,42 +1,112 @@
 """Kernel micro-benchmarks: fitness-evaluation throughput (the paper's
 26M-evaluations workload) and pow2 storage savings.
 
-Wall-clock on this CPU container measures the jnp reference path; the Pallas
-kernels are structural (interpret-validated) — their VMEM tiling analysis is
-in EXPERIMENTS.md §Perf."""
+Wall-clock on this CPU container measures the jnp paths; the Pallas kernels
+are structural (interpret-validated) — their VMEM tiling analysis is in
+EXPERIMENTS.md §Perf.
+
+The fitness rows track the hot-path fusion work (dispatcher + tiling + scan
++ dedup) and are written machine-readably to ``BENCH_fitness.json`` so PRs
+have a perf trajectory:
+
+  * ``fitness_eval``         — seed baseline: untiled jnp oracle, one jitted
+                               call per generation-equivalent.
+  * ``fitness_dispatch``     — ``population_correct`` "ref" backend
+                               (sample/population-tiled jnp).
+  * ``fitness_trainer_*``    — full scanned ``GATrainer.run`` (fitness +
+                               NSGA-II + operators in one dispatch), dedup
+                               off/on; chromo_evals_per_s counts the nominal
+                               children·samples workload like the seed row.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import GAConfig, GATrainer
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.mlp import population_accuracy
 from repro.core.quantize import quantize_inputs, pow2_quantize
+from repro.kernels.pop_mlp import population_correct
 from repro.data import load_dataset
 
 from .common import emit_row
 
+_POP = 256
+_RESULTS_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fitness.json")
 
-def bench_fitness_throughput():
+
+def _cardio_workload():
     ds = load_dataset("cardio")
     topo = MLPTopology(ds.topology)
     spec = GenomeSpec(topo)
-    pop = spec.random(jax.random.PRNGKey(0), 256)
+    pop = spec.random(jax.random.PRNGKey(0), _POP)
     xi = quantize_inputs(jnp.asarray(ds.x_train), 4)
     labels = jnp.asarray(ds.y_train)
-    fn = jax.jit(lambda p: population_accuracy(spec, p, xi, labels))
-    fn(pop).block_until_ready()
+    return ds, topo, spec, pop, xi, labels
+
+
+def _time(fn, iters=5):
+    fn()                              # compile + warm cache
     t0 = time.time()
-    iters = 5
     for _ in range(iters):
-        fn(pop).block_until_ready()
-    dt = (time.time() - t0) / iters
-    evals = 256 * xi.shape[0]
+        fn()
+    return (time.time() - t0) / iters
+
+
+def bench_fitness_throughput(results):
+    """Seed baseline: the untiled jnp oracle (pre-dispatcher semantics)."""
+    _, _, spec, pop, xi, labels = _cardio_workload()
+    fn = jax.jit(lambda p: population_accuracy(spec, p, xi, labels))
+    dt = _time(lambda: fn(pop).block_until_ready())
+    evals = _POP * xi.shape[0]
+    results["fitness_eval"] = {
+        "us_per_call": dt * 1e6, "chromo_evals_per_s": evals / dt,
+        "pop": _POP, "samples": int(xi.shape[0]), "backend": "jnp-oracle"}
     emit_row("kernel/fitness_eval", dt * 1e6,
-             f"chromo_evals_per_s={evals / dt:.0f}|pop=256|samples={xi.shape[0]}")
+             f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|samples={xi.shape[0]}")
+
+
+def bench_fitness_dispatch(results):
+    """The dispatcher's tiled jnp path (what the trainers now run on CPU)."""
+    _, _, spec, pop, xi, labels = _cardio_workload()
+    fn = jax.jit(lambda p: population_correct(p, xi, labels, spec=spec,
+                                              backend="ref"))
+    dt = _time(lambda: fn(pop).block_until_ready())
+    evals = _POP * xi.shape[0]
+    results["fitness_dispatch"] = {
+        "us_per_call": dt * 1e6, "chromo_evals_per_s": evals / dt,
+        "pop": _POP, "samples": int(xi.shape[0]), "backend": "ref-tiled"}
+    emit_row("kernel/fitness_dispatch", dt * 1e6,
+             f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|backend=ref")
+
+
+def bench_fitness_trainer(results, dedup: bool, gens: int = 20):
+    """Scanned GATrainer end to end — the shipped fitness hot loop."""
+    ds, topo, _, _, xi, labels = _cardio_workload()
+    cfg = GAConfig(pop_size=_POP, generations=gens, seed=0,
+                   fitness_backend="ref", dedup=dedup, scan=True)
+    tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
+    tr.run()                          # compile + warm
+    t0 = time.time()
+    _, _ = tr.run()
+    dt = time.time() - t0
+    evals = gens * _POP * xi.shape[0]         # nominal children workload
+    key = f"fitness_trainer_dedup_{'on' if dedup else 'off'}"
+    results[key] = {
+        "us_per_gen": dt / gens * 1e6, "chromo_evals_per_s": evals / dt,
+        "pop": _POP, "generations": gens, "samples": int(xi.shape[0]),
+        "unique_row_evals": tr.unique_evals,
+        "nominal_row_evals": (gens + 1) * _POP, "backend": "ref+scan"}
+    emit_row(f"kernel/{key}", dt / gens * 1e6,
+             f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|gens={gens}"
+             f"|unique_rows={tr.unique_evals}")
 
 
 def bench_pow2_packing():
@@ -51,8 +121,24 @@ def bench_pow2_packing():
 
 def run():
     print("# Kernel micro-benchmarks")
-    bench_fitness_throughput()
+    results = {}
+    bench_fitness_throughput(results)
+    bench_fitness_dispatch(results)
+    bench_fitness_trainer(results, dedup=False)
+    bench_fitness_trainer(results, dedup=True)
+    base = results["fitness_eval"]["chromo_evals_per_s"]
+    speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
+    results["dispatch_speedup_vs_seed"] = speedup
+    results["trainer_dedup_on_speedup_vs_seed"] = (
+        results["fitness_trainer_dedup_on"]["chromo_evals_per_s"] / base)
+    with open(_RESULTS_PATH, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# fitness dispatch speedup vs seed oracle: {speedup:.2f}x, "
+          f"scanned trainer w/ dedup: "
+          f"{results['trainer_dedup_on_speedup_vs_seed']:.2f}x "
+          f"(→ {_RESULTS_PATH})")
     bench_pow2_packing()
+    return results
 
 
 if __name__ == "__main__":

@@ -1,0 +1,118 @@
+"""Duplicate-chromosome evaluation caching for the GA fitness hot loop.
+
+Converged NSGA-II populations carry many identical genomes (doping copies,
+crossover pass-throughs, elitist survivors), and every fitness evaluation of
+the integer MLP costs O(samples · fan_in · fan_out). This module removes the
+redundant work while staying jit/scan/shard_map compatible:
+
+  * rows are hashed (two independent 32-bit multiplicative hashes) and
+    lexsorted so identical rows become contiguous,
+  * first occurrences are detected by exact row comparison (hash collisions
+    therefore cost a redundant evaluation, never a wrong result),
+  * rows that still need evaluation are packed to the *front* of a
+    static-shape batch and the batch is evaluated with ``n_valid`` set to the
+    packed count — backends that tile the population axis
+    (``pop_mlp_correct_tiled``, the Pallas kernel) skip whole tiles past
+    ``n_valid``, so the saved work is real even under ``jit``,
+  * results are gathered back to every duplicate via its group id.
+
+``dedup_eval`` additionally reuses *known* values (e.g. the parent
+population's objectives carried in ``GAState``), so a (μ+λ) generation only
+scores children that are genuinely new.
+
+Host-side (numpy) searches use :func:`unique_rows` — the same
+dedup-then-scatter contract for sequential per-genome evaluation loops
+(see ``repro.core.hw_approx_search``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hash_rows(rows: jnp.ndarray):
+    """(N, G) int32 → two (N,) uint32 multiplicative hashes.
+
+    Used only to group candidate duplicates; callers must confirm equality
+    on the actual rows (``dedup_eval`` does).
+    """
+    x = rows.astype(jnp.uint32)
+    g = jnp.arange(x.shape[1], dtype=jnp.uint32)
+    c1 = (g * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B9)) | jnp.uint32(1)
+    c2 = (g * jnp.uint32(40503) + jnp.uint32(0x85EBCA6B)) | jnp.uint32(1)
+    return jnp.sum(x * c1, axis=1), jnp.sum(x * c2, axis=1)
+
+
+def _broadcast(cond, leaf):
+    return cond.reshape(cond.shape + (1,) * (leaf.ndim - 1))
+
+
+def dedup_eval(eval_fn, rows: jnp.ndarray, known=None):
+    """Evaluate ``rows`` with duplicate suppression; returns per-row values.
+
+    eval_fn(batch, n_valid) → pytree of arrays with leading axis len(batch);
+        only the first ``n_valid`` rows of ``batch`` need meaningful values
+        (``n_valid`` is a traced int32 scalar — tiled backends use it to
+        skip population tiles).
+    rows: (N, G) int32 chromosome matrix.
+    known: optional pytree of arrays whose leaves have leading axis K —
+        values already computed for ``rows[:K]``. Any row (at any position)
+        identical to one of the first K reuses that value instead of being
+        evaluated.
+
+    Returns ``(values, n_eval)``: values is a pytree matching ``eval_fn``'s
+    output with leading axis N, in the original row order; n_eval is the
+    number of rows actually evaluated (int32 scalar).
+    """
+    N = rows.shape[0]
+    h1, h2 = hash_rows(rows)
+    order = jnp.lexsort((h2, h1))
+    sp = rows[order]
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             jnp.any(sp[1:] != sp[:-1], axis=1)])
+    uid = jnp.cumsum(first.astype(jnp.int32)) - 1      # group id per sorted row
+
+    if known is not None:
+        k_leaves = jax.tree_util.tree_leaves(known)
+        K = k_leaves[0].shape[0]
+        is_known = order < K
+        grp_known = jax.ops.segment_max(is_known.astype(jnp.int32), uid,
+                                        num_segments=N)
+        grp_kidx = jax.ops.segment_max(jnp.where(is_known, order, -1), uid,
+                                       num_segments=N)
+        needs = first & (grp_known[uid] == 0)
+    else:
+        needs = first
+
+    pack = jnp.argsort(~needs)             # stable: rows needing eval first
+    n_eval = jnp.sum(needs.astype(jnp.int32))
+    evaluated = eval_fn(sp[pack], n_eval)
+
+    slot = jnp.cumsum(needs.astype(jnp.int32)) - 1
+    grp_slot = jax.ops.segment_max(jnp.where(needs, slot, -1), uid,
+                                   num_segments=N)
+
+    def unscatter(ev_leaf, known_leaf=None):
+        val = ev_leaf[jnp.clip(grp_slot[uid], 0, None)]
+        if known_leaf is not None:
+            reuse = grp_known[uid] == 1
+            val = jnp.where(_broadcast(reuse, val),
+                            known_leaf[jnp.clip(grp_kidx[uid], 0, None)], val)
+        return jnp.zeros_like(val).at[order].set(val)
+
+    if known is None:
+        out = jax.tree_util.tree_map(unscatter, evaluated)
+    else:
+        out = jax.tree_util.tree_map(unscatter, evaluated, known)
+    return out, n_eval
+
+
+def unique_rows(rows: np.ndarray):
+    """Host-side twin: (uniq, inverse) with rows == uniq[inverse].
+
+    For sequential per-genome evaluation loops (LM-scale search): evaluate
+    ``uniq`` once, scatter with ``inverse``.
+    """
+    uniq, inverse = np.unique(np.asarray(rows), axis=0, return_inverse=True)
+    return uniq, inverse.reshape(-1)

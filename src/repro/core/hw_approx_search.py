@@ -26,6 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .dedup import unique_rows
 from .nsga2 import evaluate_ranking, survivor_select, tournament_select
 from .pareto import pareto_front
 from .quantize import (pow2_quantize, pow2_dequantize, int8_quantize,
@@ -70,6 +71,13 @@ class LMApproxSearch:
         self.n_genes = len(self.paths)
         leaves = jax.tree_util.tree_flatten_with_path(self.params)[0]
         self.sizes = {tuple(p): float(np.prod(l.shape)) for p, l in leaves}
+        # bytes_of is called once per genome per generation: precompute the
+        # searched-path size vector and the (constant) non-searched remainder
+        self._searched = {tuple(p) for p in self.paths}
+        self._gene_sizes = np.array([self.sizes[tuple(p)] for p in self.paths])
+        self._rest_bytes = 2.0 * sum(s for p, s in self.sizes.items()
+                                     if p not in self._searched)
+        self._fmt_bytes = np.array([_BYTES[f] for f in range(len(FORMATS))])
         self.exact_loss = float(self.model.loss_fn(self.params, self.batch)[0])
         self._eval_cache: dict[bytes, float] = {}
 
@@ -92,19 +100,23 @@ class LMApproxSearch:
         return self._eval_cache[key]
 
     def bytes_of(self, genome: np.ndarray) -> float:
-        total = 0.0
-        for path, g in zip(self.paths, genome):
-            total += self.sizes[tuple(path)] * _BYTES[int(g)]
-        # non-searched leaves stay bf16
-        rest = sum(s for p, s in self.sizes.items()
-                   if p not in {tuple(q) for q in self.paths})
-        return total + 2.0 * rest
+        # non-searched leaves stay bf16 (constant, precomputed)
+        return float(self._gene_sizes
+                     @ self._fmt_bytes[np.asarray(genome, int)]
+                     ) + self._rest_bytes
 
     def evaluate(self, pop: np.ndarray):
-        obj = np.zeros((len(pop), 2))
-        for i, g in enumerate(pop):
-            obj[i, 0] = self.loss_of(g)
-            obj[i, 1] = self.bytes_of(g)
+        """Population objectives; duplicate genomes are scored once.
+
+        Full-model evals don't vmap, so the loop is sequential per *unique*
+        genome — the same dedup-then-scatter contract as the jitted trainers
+        (repro.core.dedup), on host arrays."""
+        uniq, inverse = unique_rows(pop)
+        obj_u = np.zeros((len(uniq), 2))
+        for i, g in enumerate(uniq):
+            obj_u[i, 0] = self.loss_of(g)
+            obj_u[i, 1] = self.bytes_of(g)
+        obj = obj_u[inverse]
         viol = np.maximum(
             0.0, obj[:, 0] - (self.exact_loss + self.max_loss_increase))
         return obj, viol

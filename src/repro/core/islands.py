@@ -11,6 +11,13 @@ island per device along the ``data`` (and ``pod``) mesh axes with
     locals' worst,
   * the final global Pareto front is an ``all_gather`` + host-side peel.
 
+Fitness goes through the ``population_correct`` dispatcher (kernel on TPU,
+tiled jnp elsewhere — ``GAConfig.fitness_backend``); objectives are carried
+across rounds and travel with migrants over the ring, so only children are
+ever scored (with duplicate-chromosome dedup, ``GAConfig.dedup``), and the
+survivor re-ranking reuses the combined pool's dominance matrix — all
+bit-exact w.r.t. re-evaluating everything.
+
 The same code runs on 1 CPU device (degenerate ring) and on the 512-device
 dry-run mesh; ``launch/dryrun.py`` lowers it for the production meshes.
 """
@@ -27,12 +34,15 @@ from jax.experimental.shard_map import shard_map
 
 from .genome import GenomeSpec, MLPTopology
 from .quantize import quantize_inputs
-from .mlp import population_accuracy
 from .area import population_area
-from .nsga2 import evaluate_ranking, survivor_select
+from .mlp import counts_to_accuracy
+from .dedup import dedup_eval
+from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
+                    subset_ranking, survivor_select)
 from .operators import make_offspring
 from .pareto import pareto_front
 from .trainer import GAConfig
+from ..kernels.pop_mlp import population_correct
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,20 +54,30 @@ class IslandConfig:
     rounds: int = 10              # migration rounds; total gens = rounds × migrate_every
 
 
-def _local_generation(spec: GenomeSpec, cfg: GAConfig, fitness, carry, _):
-    pop, obj, viol, rank, crowd, key = carry
+def _local_generation(spec: GenomeSpec, cfg: GAConfig, counts_fn, obj_fn,
+                      carry, _):
+    pop, obj, viol, counts, rank, crowd, key = carry
+    P = pop.shape[0]
     key, k_off = jax.random.split(key)
     children = make_offspring(k_off, pop, rank, crowd, spec,
                               cfg.crossover_rate, cfg.mutation_rate_gene)
-    c_obj, c_viol = fitness(children)
     pop_a = jnp.concatenate([pop, children], axis=0)
+    if cfg.dedup:
+        # dedup caches *integer* counts; the float objective chain is built
+        # on the actual children so fusion can't introduce ulp drift
+        counts_a, _ = dedup_eval(counts_fn, pop_a, known=counts)
+        c_obj, c_viol = obj_fn(children, counts_a[P:])
+    else:
+        counts_a = jnp.zeros((2 * P,), jnp.int32)
+        c_obj, c_viol = obj_fn(children, counts_fn(children, None))
     obj_a = jnp.concatenate([obj, c_obj], axis=0)
     viol_a = jnp.concatenate([viol, c_viol], axis=0)
-    r, c = evaluate_ranking(obj_a, viol_a)
-    keep = survivor_select(r, c, pop.shape[0])
-    pop, obj, viol = pop_a[keep], obj_a[keep], viol_a[keep]
-    rank, crowd = evaluate_ranking(obj, viol)
-    return (pop, obj, viol, rank, crowd, key), None
+    dom = dominance_matrix(obj_a, viol_a)
+    r, c = ranking_from_dom(dom, obj_a)
+    keep = survivor_select(r, c, P)
+    pop, obj, viol, counts = pop_a[keep], obj_a[keep], viol_a[keep], counts_a[keep]
+    rank, crowd = subset_ranking(dom, obj_a, keep)
+    return (pop, obj, viol, counts, rank, crowd, key), None
 
 
 def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
@@ -65,49 +85,64 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
                       axis_names: tuple[str, ...] = ("data",)):
     """Returns (init_fn, round_fn) running one migration round per call.
 
-    The population lives as a global array (n_devices × island_pop, genes)
-    sharded along its first axis over ``axis_names``.
+    The population and its objectives live as global arrays
+    (n_devices × island_pop leading axis) sharded over ``axis_names``;
+    ``init_fn`` scores the initial population once and every later score
+    happens island-locally on children only.
     """
     ga = cfg.ga
 
-    def fitness(pop):
-        acc = population_accuracy(spec, pop, x_int, labels)
+    def counts_fn(pop, n_valid=None):
+        return population_correct(pop, x_int, labels, spec=spec,
+                                  backend=ga.fitness_backend,
+                                  pop_tile=ga.pop_tile,
+                                  sample_tile=ga.sample_tile,
+                                  n_valid_rows=n_valid)
+
+    def obj_fn(pop, counts):
+        acc = counts_to_accuracy(counts, labels.shape[0])
         area = population_area(spec, pop).astype(jnp.float32)
         obj = jnp.stack([1.0 - acc, area], axis=-1)
         viol = jnp.maximum(0.0, (baseline_acc - acc) - ga.max_acc_loss)
         return obj, viol
 
-    gen = partial(_local_generation, spec, ga, fitness)
+    gen = partial(_local_generation, spec, ga, counts_fn, obj_fn)
     n_axis = int(np.prod([mesh.shape[a] for a in axis_names]))
 
-    def island_round(pop, key):
-        """Local shard view: pop (island_pop, genes), key (1, 2) uint32
-        (the leading shard axis stays — strip it for jax.random)."""
+    def island_round(pop, obj, viol, counts, key):
+        """Local shard view: pop (island_pop, genes), obj (island_pop, 2),
+        viol/counts (island_pop,), key (1, 2) uint32 (the leading shard
+        axis stays — strip it for jax.random)."""
         key = key[0]
-        obj, viol = fitness(pop)
         rank, crowd = evaluate_ranking(obj, viol)
-        carry = (pop, obj, viol, rank, crowd, key)
+        carry = (pop, obj, viol, counts, rank, crowd, key)
         carry, _ = jax.lax.scan(gen, carry, None, length=cfg.migrate_every)
-        pop, obj, viol, rank, crowd, key = carry
+        pop, obj, viol, counts, rank, crowd, key = carry
 
         # --- ring migration: send my best n_migrants to the next island ---
+        # objectives are deterministic in the genome, so they travel with it
         order = jnp.lexsort((-crowd, rank))
-        best = pop[order[: cfg.n_migrants]]
+        best = order[: cfg.n_migrants]
+        payload = (pop[best], obj[best], viol[best], counts[best])
         axis = axis_names[-1]
         perm = [(i, (i + 1) % mesh.shape[axis]) for i in range(mesh.shape[axis])]
-        incoming = jax.lax.ppermute(best, axis, perm)
+        payload = jax.lax.ppermute(payload, axis, perm)
         if len(axis_names) > 1:   # cross-pod ring on the slower axis too
             perm0 = [(i, (i + 1) % mesh.shape[axis_names[0]])
                      for i in range(mesh.shape[axis_names[0]])]
-            incoming = jax.lax.ppermute(incoming, axis_names[0], perm0)
-        pop = pop.at[order[-cfg.n_migrants:]].set(incoming)
-        return pop, key[None]
+            payload = jax.lax.ppermute(payload, axis_names[0], perm0)
+        worst = order[-cfg.n_migrants:]
+        pop = pop.at[worst].set(payload[0])
+        obj = obj.at[worst].set(payload[1])
+        viol = viol.at[worst].set(payload[2])
+        counts = counts.at[worst].set(payload[3])
+        return pop, obj, viol, counts, key[None]
 
     pspec = P(axis_names)
     sharded_round = shard_map(
         island_round, mesh=mesh,
-        in_specs=(pspec, pspec),
-        out_specs=(pspec, pspec),
+        in_specs=(pspec, pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec, pspec),
         check_rep=False,
     )
 
@@ -115,8 +150,13 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
         key = jax.random.PRNGKey(seed)
         k_pop, k_isl = jax.random.split(key)
         pop = spec.random(k_pop, n_axis * cfg.island_pop)
+        if ga.dedup:
+            counts, _ = dedup_eval(counts_fn, pop)
+        else:
+            counts = counts_fn(pop)
+        obj, viol = obj_fn(pop, counts)
         keys = jax.random.split(k_isl, n_axis)
-        return pop, keys
+        return pop, obj, viol, counts, keys
 
     return init, jax.jit(sharded_round)
 
@@ -130,13 +170,11 @@ def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,
     labels = jnp.asarray(labels, jnp.int32)
     init, round_fn = build_island_step(spec, cfg, mesh, x_int, labels,
                                        baseline_acc, axis_names)
-    pop, keys = init(seed)
+    pop, obj, viol, counts, keys = init(seed)
     for _ in range(cfg.rounds):
-        pop, keys = round_fn(pop, keys)
+        pop, obj, viol, counts, keys = round_fn(pop, obj, viol, counts, keys)
     pop = np.asarray(jax.device_get(pop))
 
-    # global Pareto peel on host
-    acc = population_accuracy(spec, jnp.asarray(pop), x_int, labels)
-    area = population_area(spec, jnp.asarray(pop))
-    obj = np.stack([1.0 - np.asarray(acc), np.asarray(area, np.float64)], axis=-1)
+    # global Pareto peel on host — objectives were carried, not recomputed
+    obj = np.asarray(jax.device_get(obj), np.float64)
     return pareto_front(obj, extras={"genomes": pop}), spec

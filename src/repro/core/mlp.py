@@ -7,7 +7,12 @@ the accumulator width, which never exceeds 2^23 for the paper's topologies).
 The last layer omits QReLU — classification is argmax over raw accumulators.
 
 ``population_*`` variants vmap over a population axis; they are the fitness
-hot loop and have a Pallas kernel twin in ``repro.kernels.pop_mlp``.
+hot loop and have a Pallas kernel twin in ``repro.kernels.pop_mlp``. Trainers
+should not call these directly — go through the
+``repro.kernels.pop_mlp.population_correct`` dispatcher, which picks the
+kernel on TPU and a sample/population-tiled jnp path elsewhere (the untiled
+vmap here materializes (pop, batch, fan_in, fan_out) intermediates and is
+kept as the bit-exact oracle).
 """
 from __future__ import annotations
 
@@ -58,6 +63,30 @@ def population_accuracy(spec: GenomeSpec, pop: jnp.ndarray, x_int, labels) -> jn
     def one(g):
         pred = jnp.argmax(mlp_forward(spec, g, x_int), axis=-1)
         return jnp.mean((pred == labels).astype(jnp.float32))
+
+    return jax.vmap(one)(pop)
+
+
+def counts_to_accuracy(counts: jnp.ndarray, n_samples: int) -> jnp.ndarray:
+    """int32 correct counts → float32 accuracy, bit-identical to the
+    oracle's ``jnp.mean``: mean lowers to sum × reciprocal(n), not a true
+    division, and the sum of 0/1 float32 terms equals the count exactly for
+    n < 2²⁴ — so this is THE conversion both trainers must share."""
+    return counts.astype(jnp.float32) * jnp.float32(1.0 / n_samples)
+
+
+def population_correct_counts(spec: GenomeSpec, pop: jnp.ndarray, x_int,
+                              labels) -> jnp.ndarray:
+    """(P, n_genes) × (S, n_in) → (P,) int32 correct-prediction counts.
+
+    Count-based twin of :func:`population_accuracy` (counts are what the
+    Pallas kernel and the tiled reference accumulate across sample tiles;
+    ``count / S`` reproduces the float32 mean bit-for-bit for S < 2^24).
+    Padded samples can be masked by passing a negative label."""
+
+    def one(g):
+        pred = jnp.argmax(mlp_forward(spec, g, x_int), axis=-1)
+        return jnp.sum((pred == labels).astype(jnp.int32))
 
     return jax.vmap(one)(pop)
 

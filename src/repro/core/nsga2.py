@@ -37,9 +37,16 @@ def dominance_matrix(obj: jnp.ndarray, viol: jnp.ndarray) -> jnp.ndarray:
 
 
 def nondominated_rank(dom: jnp.ndarray) -> jnp.ndarray:
-    """Front index per individual (0 = best) by peeling zero-indegree nodes."""
+    """Front index per individual (0 = best) by peeling zero-indegree nodes.
+
+    The peel body is a float32 vector-matrix product (BLAS gemv) instead of
+    a bool mask-and-reduce: converged pools peel hundreds of fronts per
+    generation, and the O(P²) body dominated the NSGA-II cost of the fitness
+    hot loop. Counts stay ≤ P < 2²⁴ so float32 arithmetic is integer-exact —
+    ranks are bit-identical to the bool formulation."""
     P = dom.shape[0]
     UNRANKED = P
+    domf = dom.astype(jnp.float32)
 
     def cond(carry):
         rank, _, _ = carry
@@ -47,14 +54,15 @@ def nondominated_rank(dom: jnp.ndarray) -> jnp.ndarray:
 
     def body(carry):
         rank, n_dominators, r = carry
-        front = (n_dominators == 0) & (rank == UNRANKED)
+        front = (n_dominators == 0.0) & (rank == UNRANKED)
         rank = jnp.where(front, r, rank)
-        removed = jnp.sum(dom & front[:, None], axis=0)
-        n_dominators = jnp.where(front, P + 1, n_dominators - removed)
+        removed = front.astype(jnp.float32) @ domf
+        n_dominators = jnp.where(front, jnp.float32(P + 1),
+                                 n_dominators - removed)
         return rank, n_dominators, r + 1
 
     rank0 = jnp.full((P,), UNRANKED, jnp.int32)
-    nd0 = jnp.sum(dom, axis=0).astype(jnp.int32)
+    nd0 = jnp.sum(domf, axis=0)
     rank, _, _ = jax.lax.while_loop(cond, body, (rank0, nd0, jnp.int32(0)))
     return rank
 
@@ -82,11 +90,26 @@ def crowding_distance(obj: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
     return dist
 
 
-def evaluate_ranking(obj: jnp.ndarray, viol: jnp.ndarray):
-    dom = dominance_matrix(obj, viol)
+def ranking_from_dom(dom: jnp.ndarray, obj: jnp.ndarray):
+    """(rank, crowd) from a precomputed dominance matrix."""
     rank = nondominated_rank(dom)
     crowd = crowding_distance(obj, rank)
     return rank, crowd
+
+
+def evaluate_ranking(obj: jnp.ndarray, viol: jnp.ndarray):
+    return ranking_from_dom(dominance_matrix(obj, viol), obj)
+
+
+def subset_ranking(dom: jnp.ndarray, obj: jnp.ndarray, keep: jnp.ndarray):
+    """Re-rank the ``keep`` subset without recomputing dominance.
+
+    Constrained dominance is pairwise, so ``dom[keep][:, keep]`` equals
+    ``dominance_matrix(obj[keep], viol[keep])`` exactly — the (μ+λ)
+    survivor re-ranking reuses the combined pool's O(P²M) matrix instead
+    of rebuilding it (the second-biggest cost of a generation after
+    fitness)."""
+    return ranking_from_dom(dom[keep][:, keep], obj[keep])
 
 
 def tournament_select(key, rank, crowd, n: int) -> jnp.ndarray:

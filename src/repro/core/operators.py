@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .genome import GenomeSpec
+from .nsga2 import tournament_select
 
 
 def uniform_crossover(key, a: jnp.ndarray, b: jnp.ndarray, pc: float):
@@ -49,8 +50,6 @@ def mutate(key, pop: jnp.ndarray, spec: GenomeSpec, pm_gene: float) -> jnp.ndarr
 def make_offspring(key, pop: jnp.ndarray, rank, crowd, spec: GenomeSpec,
                    pc: float, pm_gene: float) -> jnp.ndarray:
     """Tournament → crossover → mutation: produces |pop| children."""
-    from .nsga2 import tournament_select
-
     P = pop.shape[0]
     k_sel, k_cx, k_mut = jax.random.split(key, 3)
     parents = tournament_select(k_sel, rank, crowd, P)

@@ -1,10 +1,19 @@
 """GA-based hardware-approximation-aware training (paper §IV, Fig. 2).
 
-Single-host trainer: the full NSGA-II loop jitted as one generation step.
-Objectives (paper Eq. (3)):   [1 − Accuracy(θ, D),  Area(θ) in FAs]
-Constraint (paper §IV-A):      accuracy ≥ baseline − max_acc_loss (10 %)
-Init (paper §IV-A):            random population doped with ~10 % nearly
-                               non-approximate chromosomes from a float MLP.
+Single-host trainer. Objectives (paper Eq. (3)): [1 − Accuracy(θ, D),
+Area(θ) in FAs]; constraint (paper §IV-A): accuracy ≥ baseline − max_acc_loss
+(10 %); init (paper §IV-A): random population doped with ~10 % nearly
+non-approximate chromosomes from a float MLP.
+
+The fitness hot loop (the paper's ~26 M chromosome evaluations) runs through
+the ``repro.kernels.pop_mlp.population_correct`` dispatcher — Pallas kernel
+on TPU, sample/population-tiled jnp elsewhere — selected by
+``GAConfig.fitness_backend``. Generations execute as a single ``lax.scan``
+dispatch (``GAConfig.scan``), only children are ever scored (parent
+objectives ride in ``GAState``), duplicate children reuse cached objectives
+(``GAConfig.dedup``, see ``repro.core.dedup``), and survivor re-ranking
+reuses the combined pool's dominance matrix. All of these are bit-exact
+w.r.t. the naive loop.
 
 The distributed (island) variant lives in ``repro.core.islands``.
 """
@@ -12,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Optional, Sequence
 
 import numpy as np
@@ -21,11 +29,14 @@ import jax.numpy as jnp
 
 from .genome import GenomeSpec, MLPTopology
 from .quantize import quantize_inputs
-from .mlp import population_accuracy
+from .mlp import counts_to_accuracy, population_accuracy
 from .area import population_area
-from .nsga2 import evaluate_ranking, survivor_select
+from .dedup import dedup_eval
+from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
+                    subset_ranking, survivor_select)
 from .operators import make_offspring
 from .pareto import pareto_front
+from ..kernels.pop_mlp import population_correct
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +50,12 @@ class GAConfig:
     acc_only: bool = False           # Table III "GA" column: no area objective
     seed: int = 0
     log_every: int = 10
+    # -- fitness hot-path knobs (all bit-exact w.r.t. the naive loop) -------
+    fitness_backend: str = "auto"    # auto|kernel|interpret|ref|jnp
+    pop_tile: int = 64               # population tile ("ref" backend)
+    sample_tile: int = 256           # sample tile ("ref" backend)
+    dedup: bool = True               # duplicate-chromosome eval caching
+    scan: bool = True                # lax.scan over generations (one dispatch)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -49,12 +66,15 @@ class GAState:
     viol: jnp.ndarray       # (P,)
     rank: jnp.ndarray       # (P,)
     crowd: jnp.ndarray      # (P,)
+    counts: jnp.ndarray     # (P,) int32 correct counts (dedup reuse; zeros
+    #                         when dedup is off — obj/viol stay the source
+    #                         of truth for selection)
     key: jnp.ndarray
     gen: jnp.ndarray
 
     def tree_flatten(self):
         return (self.pop, self.obj, self.viol, self.rank, self.crowd,
-                self.key, self.gen), None
+                self.counts, self.key, self.gen), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -75,11 +95,30 @@ class GATrainer:
         # chance-level baseline if no float model is supplied
         self.baseline_acc = float(baseline_acc) if baseline_acc is not None else 1.0
         self.doping_seeds = doping_seeds
-        self._step = jax.jit(self._generation)
+        # the "jnp" oracle has no n_valid_rows tile skip — dedup buys nothing
+        self._dedup = cfg.dedup and cfg.fitness_backend != "jnp"
+        self._step = jax.jit(lambda s: self._generation(s)[0])
+        # jit only the *integer* counts for init: the float objective chain
+        # stays eager, exactly as the seed trainer computed it (jitting it
+        # perturbs ulps via fusion)
+        self._init_counts = jax.jit(self._init_counts_impl)
+        self._scan_cache: dict[int, object] = {}
 
     # -- fitness -----------------------------------------------------------
-    def _fitness(self, pop):
-        acc = population_accuracy(self.spec, pop, self.x_int, self.labels)
+    def _counts(self, pop, n_valid=None):
+        """(N, G) → (N,) int32 correct counts via the dispatcher.
+
+        Rows at or past ``n_valid`` land in skipped tiles (dedup fast path)
+        and carry unspecified values — callers overwrite them. Dedup caches
+        these *integer* counts, never derived floats: the float objective
+        chain is then built once per generation on the actual children, so
+        XLA fusion decisions can't introduce ulp drift vs the naive loop."""
+        return population_correct(
+            pop, self.x_int, self.labels, spec=self.spec,
+            backend=self.cfg.fitness_backend, pop_tile=self.cfg.pop_tile,
+            sample_tile=self.cfg.sample_tile, n_valid_rows=n_valid)
+
+    def _objectives(self, pop, acc):
         if self.cfg.acc_only:        # conventional GA training (Table III)
             area = jnp.zeros_like(acc)
         else:
@@ -88,23 +127,57 @@ class GATrainer:
         viol = jnp.maximum(0.0, (self.baseline_acc - acc) - self.cfg.max_acc_loss)
         return obj, viol
 
-    # -- generation step (jitted) ------------------------------------------
-    def _generation(self, state: GAState) -> GAState:
+    def _acc_of_counts(self, counts):
+        return counts_to_accuracy(counts, self.labels.shape[0])
+
+    def _fitness(self, pop):
+        """(N, G) → ((N, 2) objectives, (N,) violation) — non-dedup path."""
+        if self.cfg.fitness_backend == "jnp":
+            acc = population_accuracy(self.spec, pop, self.x_int, self.labels)
+        else:
+            acc = self._acc_of_counts(self._counts(pop))
+        return self._objectives(pop, acc)
+
+    # -- generation step (jit/scan body) -----------------------------------
+    def _generation(self, state: GAState):
+        """One (μ+λ) NSGA-II generation; returns (state, aux) where aux is
+        (best_err, best_area, n_evaluated_rows)."""
+        P = self.cfg.pop_size
         key, k_off = jax.random.split(state.key)
         children = make_offspring(k_off, state.pop, state.rank, state.crowd,
                                   self.spec, self.cfg.crossover_rate,
                                   self.cfg.mutation_rate_gene)
-        c_obj, c_viol = self._fitness(children)
         pop = jnp.concatenate([state.pop, children], axis=0)
+        if self._dedup:
+            # count only children that duplicate neither a parent nor each
+            # other; everything else reuses cached integer counts
+            counts, n_eval = dedup_eval(
+                lambda rows, n: self._counts(rows, n_valid=n),
+                pop, known=state.counts)
+            c_obj, c_viol = self._objectives(
+                children, self._acc_of_counts(counts[P:]))
+        else:
+            counts = jnp.zeros((2 * P,), jnp.int32)
+            c_obj, c_viol = self._fitness(children)
+            n_eval = jnp.int32(P)
         obj = jnp.concatenate([state.obj, c_obj], axis=0)
         viol = jnp.concatenate([state.viol, c_viol], axis=0)
-        rank, crowd = evaluate_ranking(obj, viol)
-        keep = survivor_select(rank, crowd, self.cfg.pop_size)
-        rank2, crowd2 = evaluate_ranking(obj[keep], viol[keep])
-        return GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
-                       key, state.gen + 1)
+        dom = dominance_matrix(obj, viol)
+        rank, crowd = ranking_from_dom(dom, obj)
+        keep = survivor_select(rank, crowd, P)
+        rank2, crowd2 = subset_ranking(dom, obj, keep)
+        new = GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
+                      counts[keep], key, state.gen + 1)
+        aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval)
+        return new, aux
 
     # -- init ---------------------------------------------------------------
+    def _init_counts_impl(self, pop):
+        if self._dedup:              # doping replicates seeds — score them once
+            return dedup_eval(
+                lambda rows, n: self._counts(rows, n_valid=n), pop)
+        return self._counts(pop), jnp.int32(pop.shape[0])
+
     def init_state(self) -> GAState:
         key = jax.random.PRNGKey(self.cfg.seed)
         key, k_pop = jax.random.split(key)
@@ -114,27 +187,73 @@ class GATrainer:
             seeds = np.stack([np.asarray(s) for s in self.doping_seeds])
             reps = np.resize(np.arange(len(seeds)), n_dope)
             pop = pop.at[:n_dope].set(jnp.asarray(seeds[reps]))
-        obj, viol = self._fitness(pop)
+        if self.cfg.fitness_backend == "jnp":
+            counts = jnp.zeros((self.cfg.pop_size,), jnp.int32)
+            self._init_unique_evals = self.cfg.pop_size
+            obj, viol = self._fitness(pop)
+        else:
+            counts, n_eval = self._init_counts(pop)
+            self._init_unique_evals = int(n_eval)
+            obj, viol = self._objectives(pop, self._acc_of_counts(counts))
         rank, crowd = evaluate_ranking(obj, viol)
-        return GAState(pop, obj, viol, rank, crowd, key, jnp.int32(0))
+        return GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
 
     # -- public API ----------------------------------------------------------
-    def run(self, generations: int | None = None, verbose: bool = False):
+    def run(self, generations: int | None = None, verbose: bool = False,
+            scan: bool | None = None):
+        """Train for ``generations``; returns (final state, history).
+
+        ``scan`` (default ``cfg.scan``) runs all generations as one
+        ``lax.scan`` dispatch; ``scan=False`` keeps the per-generation
+        Python loop (seed semantics — bit-identical results).
+
+        History ``time_s`` caveat: a scanned run has no per-generation
+        wall clock (one dispatch covers the whole run), so ``time_s`` is
+        the total elapsed time apportioned linearly across generations;
+        only ``scan=False`` records measured cumulative timestamps."""
         gens = generations if generations is not None else self.cfg.generations
+        scan = self.cfg.scan if scan is None else scan
         state = self.init_state()
         history = []
         t0 = time.time()
-        for g in range(gens):
-            state = self._step(state)
-            if verbose and (g % self.cfg.log_every == 0 or g == gens - 1):
-                err = np.asarray(state.obj[:, 0])
-                area = np.asarray(state.obj[:, 1])
-                history.append({
-                    "gen": g,
-                    "best_err": float(err.min()),
-                    "best_area": float(area.min()),
-                    "time_s": time.time() - t0,
-                })
+        if scan and gens > 0:
+            runner = self._scan_cache.get(gens)
+            if runner is None:
+                def body(s, _):
+                    s2, aux = self._generation(s)
+                    return s2, aux
+
+                runner = jax.jit(
+                    lambda s: jax.lax.scan(body, s, None, length=gens))
+                self._scan_cache[gens] = runner
+            state, (best_err, best_area, n_eval) = runner(state)
+            jax.block_until_ready(state.pop)
+            elapsed = time.time() - t0
+            self.unique_evals = (int(np.asarray(n_eval).sum())
+                                 + self._init_unique_evals)
+            if verbose:
+                for g in range(gens):
+                    if g % self.cfg.log_every == 0 or g == gens - 1:
+                        history.append({
+                            "gen": g,
+                            "best_err": float(best_err[g]),
+                            "best_area": float(best_area[g]),
+                            # apportioned, not measured — see docstring
+                            "time_s": elapsed * (g + 1) / gens,
+                        })
+        else:
+            self.unique_evals = None
+            for g in range(gens):
+                state = self._step(state)
+                if verbose and (g % self.cfg.log_every == 0 or g == gens - 1):
+                    err = np.asarray(state.obj[:, 0])
+                    area = np.asarray(state.obj[:, 1])
+                    history.append({
+                        "gen": g,
+                        "best_err": float(err.min()),
+                        "best_area": float(area.min()),
+                        "time_s": time.time() - t0,
+                    })
         jax.block_until_ready(state.pop)
         self.evaluations = (gens + 1) * self.cfg.pop_size * int(self.labels.shape[0])
         return state, history

@@ -1,3 +1,3 @@
-from .ops import population_correct
+from .ops import population_correct, BACKENDS
 from .kernel import pop_mlp_correct
-from .ref import pop_mlp_correct_ref
+from .ref import pop_mlp_correct_ref, pop_mlp_correct_tiled

@@ -6,6 +6,20 @@ kernel tiles (population × samples) into VMEM blocks; every op is int32 on
 the VPU (bitwise-AND mask, shift, signed accumulate, clamp). Output is the
 per-chromosome correct-prediction count, accumulated across sample tiles.
 
+This is one backend behind the ``population_correct`` dispatcher (ops.py):
+
+  * ``kernel``/``interpret`` — this Pallas kernel (compiled on TPU,
+    interpret-mode elsewhere). ``bp``/``bs`` tile the population and sample
+    axes so blocks stay VMEM-sized; the sample grid axis accumulates into
+    the output block, the tail sample tile is masked via ``n_valid``.
+  * ``ref``/``jnp`` — the tiled / oracle jnp paths in ref.py.
+
+Duplicate-chromosome dedup (repro.core.dedup) packs rows needing evaluation
+to the front and passes ``n_valid_rows``: population grid steps whose block
+starts at or past it skip the forward pass entirely (``pl.when``), so
+converged populations cost only their unique rows. Rows ≥ ``n_valid_rows``
+have unspecified counts.
+
 Genome layout per chromosome row (repro.core.genome.GenomeSpec): masks,
 signs, exps, biases, bshift, rshift per layer, concatenated. The spec's
 layer slices arrive as static python ints.
@@ -46,48 +60,67 @@ def _forward_block(genome, x, spec: GenomeSpec):
     return h
 
 
-def _kernel(genome_ref, x_ref, y_ref, o_ref, *, spec: GenomeSpec, n_s: int,
-            n_valid: int, bs: int):
+def _kernel(genome_ref, x_ref, y_ref, rows_ref, o_ref, *, spec: GenomeSpec,
+            n_s: int, n_valid: int, bs: int, bp: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    logits = _forward_block(genome_ref[...], x_ref[...], spec)
-    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (bp, bs)
-    correct = (pred == y_ref[...][:, 0][None, :]).astype(jnp.int32)
-    # mask padded samples in the tail tile
+    # program_id must stay outside the traced-cond body: the interpret-mode
+    # impl only substitutes it at kernel top level
+    row_start = pl.program_id(0) * bp
     start = pl.program_id(1) * bs
-    valid = (start + jax.lax.broadcasted_iota(jnp.int32, correct.shape, 1)
-             ) < n_valid
-    o_ref[...] += jnp.sum(jnp.where(valid, correct, 0), axis=1,
-                          keepdims=True)
+
+    # dedup fast path: skip population blocks holding only duplicate rows
+    @pl.when(row_start < rows_ref[0, 0])
+    def _compute():
+        logits = _forward_block(genome_ref[...], x_ref[...], spec)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (bp, bs)
+        correct = (pred == y_ref[...][:, 0][None, :]).astype(jnp.int32)
+        # mask padded samples in the tail tile
+        valid = (start + jax.lax.broadcasted_iota(jnp.int32, correct.shape, 1)
+                 ) < n_valid
+        o_ref[...] += jnp.sum(jnp.where(valid, correct, 0), axis=1,
+                              keepdims=True)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "bp", "bs", "interpret"))
 def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
                     *, spec: GenomeSpec, bp: int = 8, bs: int = 128,
-                    interpret: bool = False) -> jnp.ndarray:
-    """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts."""
+                    interpret: bool = False,
+                    n_valid_rows=None) -> jnp.ndarray:
+    """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
+
+    ``n_valid_rows`` (optional, traced int32): rows at or past it live in
+    skipped population blocks — see module docstring."""
     P, G = pop.shape
     S = x_int.shape[0]
     bp = min(bp, P)
-    assert P % bp == 0, (P, bp)
+    pad_p = (bp - P % bp) % bp
+    if pad_p:                     # zero rows are valid genomes; counts dropped
+        pop = jnp.pad(pop, ((0, pad_p), (0, 0)))
     pad_s = (bs - S % bs) % bs
     if pad_s:
         x_int = jnp.pad(x_int, ((0, pad_s), (0, 0)))
         labels = jnp.pad(labels, (0, pad_s), constant_values=-1)
     n_s = (S + pad_s) // bs
+    rows = jnp.full((1, 1), P if n_valid_rows is None else n_valid_rows,
+                    jnp.int32)
     out = pl.pallas_call(
-        functools.partial(_kernel, spec=spec, n_s=n_s, n_valid=S, bs=bs),
-        grid=(P // bp, n_s),
+        functools.partial(_kernel, spec=spec, n_s=n_s, n_valid=S, bs=bs,
+                          bp=bp),
+        grid=((P + pad_p) // bp, n_s),
         in_specs=[
             pl.BlockSpec((bp, G), lambda i, j: (i, 0)),
             pl.BlockSpec((bs, x_int.shape[1]), lambda i, j: (j, 0)),
             pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),    # 2-D for Mosaic
+            # valid-row scalar; plain (1, 1) block — SMEM memory_space breaks
+            # interpret mode on this jax version
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((P, 1), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((P + pad_p, 1), jnp.int32),
         interpret=interpret,
-    )(pop, x_int, labels[:, None])
-    return out[:, 0]
+    )(pop, x_int, labels[:, None], rows)
+    return out[:P, 0]

@@ -1,19 +1,56 @@
-"""Public op: population fitness with kernel/reference dispatch."""
+"""Public op: population fitness with backend dispatch.
+
+This is the single entry point the trainers (GATrainer, islands) and the
+benchmarks use for the fitness hot loop — see ``GAConfig.fitness_backend``.
+
+Backends:
+  "auto"      — Pallas kernel on TPU, tiled jnp path elsewhere (default)
+  "kernel"    — Pallas kernel, compiled
+  "interpret" — Pallas kernel, interpret mode (structural validation on CPU)
+  "ref"       — sample/population-tiled jnp path (the fast CPU path)
+  "jnp"       — untiled vmap oracle (seed semantics; no n_valid_rows skip)
+
+``n_valid_rows`` (traced int32) enables the dedup fast path: rows past it
+live in population tiles that are skipped outright ("ref", "kernel",
+"interpret") and have unspecified counts. The "jnp" oracle evaluates
+everything regardless.
+"""
 from __future__ import annotations
 
 import jax
 
 from .kernel import pop_mlp_correct
-from .ref import pop_mlp_correct_ref
+from .ref import pop_mlp_correct_ref, pop_mlp_correct_tiled
+
+BACKENDS = ("auto", "kernel", "interpret", "ref", "jnp")
 
 
-def population_correct(pop, x_int, labels, *, spec, use_kernel=None,
-                       interpret=None):
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if use_kernel:
+def population_correct(pop, x_int, labels, *, spec, backend=None,
+                       use_kernel=None, interpret=None,
+                       pop_tile: int = 64, sample_tile: int = 256,
+                       n_valid_rows=None):
+    """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
+
+    ``use_kernel``/``interpret`` are the legacy knobs (pre-dispatcher API)
+    and take precedence over ``backend`` when given."""
+    if use_kernel is not None:
+        backend = "kernel" if use_kernel else "jnp"
+        if use_kernel and interpret is None:
+            interpret = jax.default_backend() != "tpu"
+    if backend is None or backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if backend == "kernel" or backend == "interpret":
         return pop_mlp_correct(
-            pop, x_int, labels, spec=spec,
-            interpret=(jax.default_backend() != "tpu"
-                       if interpret is None else interpret))
-    return pop_mlp_correct_ref(pop, x_int, labels, spec=spec)
+            pop, x_int, labels, spec=spec, bp=min(pop_tile, 8),
+            bs=min(sample_tile, 128),
+            interpret=(backend == "interpret" if interpret is None
+                       else interpret),
+            n_valid_rows=n_valid_rows)
+    if backend == "ref":
+        return pop_mlp_correct_tiled(pop, x_int, labels, spec=spec,
+                                     pop_tile=pop_tile,
+                                     sample_tile=sample_tile,
+                                     n_valid_rows=n_valid_rows)
+    if backend == "jnp":
+        return pop_mlp_correct_ref(pop, x_int, labels, spec=spec)
+    raise ValueError(f"unknown fitness backend {backend!r}; want {BACKENDS}")

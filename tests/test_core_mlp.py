@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.genome import MLPTopology, GenomeSpec
