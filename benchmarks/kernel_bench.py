@@ -17,6 +17,11 @@ have a perf trajectory:
                                NSGA-II + operators in one dispatch), dedup
                                off/on; chromo_evals_per_s counts the nominal
                                children·samples workload like the seed row.
+  * ``fitness_batched_seeds``— an N-seed sweep: N sequential ``GATrainer``
+                               runs (one compile each — the pre-engine cost
+                               of repeated-run statistics) vs ONE
+                               ``engine.run_batch`` dispatch that vmaps the
+                               whole scanned run over the seed axis.
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GAConfig, GATrainer
+from repro.core import engine
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.mlp import population_accuracy
 from repro.core.quantize import quantize_inputs, pow2_quantize
@@ -53,6 +59,12 @@ def _cardio_workload():
 
 
 def _time(fn, iters=5):
+    """Mean-of-N timing after one warm call. The seed oracle, dispatcher
+    and trainer rows all use this estimator, so their speedup ratios in
+    BENCH_fitness.json compare like with like — and stay comparable with
+    the ratios recorded by earlier PRs. (``fitness_batched_seeds``
+    deliberately reports single-shot cold timings instead — compile time
+    IS the sweep cost being measured there.)"""
     fn()                              # compile + warm cache
     t0 = time.time()
     for _ in range(iters):
@@ -93,10 +105,7 @@ def bench_fitness_trainer(results, dedup: bool, gens: int = 20):
     cfg = GAConfig(pop_size=_POP, generations=gens, seed=0,
                    fitness_backend="ref", dedup=dedup, scan=True)
     tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
-    tr.run()                          # compile + warm
-    t0 = time.time()
-    _, _ = tr.run()
-    dt = time.time() - t0
+    dt = _time(lambda: tr.run(), iters=3)
     evals = gens * _POP * xi.shape[0]         # nominal children workload
     key = f"fitness_trainer_dedup_{'on' if dedup else 'off'}"
     results[key] = {
@@ -107,6 +116,51 @@ def bench_fitness_trainer(results, dedup: bool, gens: int = 20):
     emit_row(f"kernel/{key}", dt / gens * 1e6,
              f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|gens={gens}"
              f"|unique_rows={tr.unique_evals}")
+
+
+def bench_fitness_batched(results, n_seeds: int = 8, pop: int = 64,
+                          gens: int = 20):
+    """N-seed sweep throughput: sequential trainers vs one vmapped run.
+
+    Both sides include compilation — that IS the sweep cost: each fresh
+    ``GATrainer`` re-jits its scan, while ``engine.run_batch`` compiles the
+    batched program once. ``batched_warm_s`` additionally reports the
+    steady-state redispatch cost."""
+    ds, topo, _, _, xi, labels = _cardio_workload()
+
+    def cfg(seed):
+        return GAConfig(pop_size=pop, generations=gens, seed=seed,
+                        fitness_backend="ref", scan=True)
+
+    t0 = time.time()
+    for s in range(n_seeds):
+        GATrainer(topo, ds.x_train, ds.y_train, cfg(s)).run()
+    seq_s = time.time() - t0
+
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg(0))
+    seeds = np.arange(n_seeds)
+    t0 = time.time()
+    states, _, _ = engine.run_batch(problem, seeds)
+    jax.block_until_ready(states.pop)
+    batched_s = time.time() - t0
+    t0 = time.time()
+    states, _, _ = engine.run_batch(problem, seeds)
+    jax.block_until_ready(states.pop)
+    warm_s = time.time() - t0
+
+    evals = n_seeds * gens * pop * xi.shape[0]
+    speedup = seq_s / batched_s
+    results["fitness_batched_seeds"] = {
+        "sequential_s": seq_s, "batched_s": batched_s,
+        "batched_warm_s": warm_s,
+        "chromo_evals_per_s": evals / batched_s,
+        "n_seeds": n_seeds, "pop": pop, "generations": gens,
+        "samples": int(xi.shape[0]), "backend": "ref+scan+vmap"}
+    results["batched_seeds_speedup_vs_sequential"] = speedup
+    emit_row("kernel/fitness_batched_seeds", batched_s / n_seeds * 1e6,
+             f"chromo_evals_per_s={evals / batched_s:.0f}|seeds={n_seeds}"
+             f"|pop={pop}|gens={gens}|seq_s={seq_s:.1f}|batched_s={batched_s:.1f}"
+             f"|speedup_vs_sequential={speedup:.2f}x")
 
 
 def bench_pow2_packing():
@@ -126,6 +180,7 @@ def run():
     bench_fitness_dispatch(results)
     bench_fitness_trainer(results, dedup=False)
     bench_fitness_trainer(results, dedup=True)
+    bench_fitness_batched(results)
     base = results["fitness_eval"]["chromo_evals_per_s"]
     speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
     results["dispatch_speedup_vs_seed"] = speedup
@@ -135,7 +190,9 @@ def run():
         json.dump(results, f, indent=1, default=float)
     print(f"# fitness dispatch speedup vs seed oracle: {speedup:.2f}x, "
           f"scanned trainer w/ dedup: "
-          f"{results['trainer_dedup_on_speedup_vs_seed']:.2f}x "
+          f"{results['trainer_dedup_on_speedup_vs_seed']:.2f}x, "
+          f"8-seed batched vs sequential: "
+          f"{results['batched_seeds_speedup_vs_sequential']:.2f}x "
           f"(→ {_RESULTS_PATH})")
     bench_pow2_packing()
     return results

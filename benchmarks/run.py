@@ -14,6 +14,8 @@ def main() -> None:
     from . import common
     if quick:
         common.GA_GENS = 15
+        common.N_SEEDS = 2      # smoke-scale statistics; full runs use 3
+        common.GA_OVERRIDES = {}  # no full-scale pendigits run in smoke mode
     from . import (table1_baseline, table2_approx, table3_time, fig4_sota,
                    fig5_power, roofline_bench, kernel_bench)
 

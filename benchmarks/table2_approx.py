@@ -1,5 +1,7 @@
 """Paper Table II analog: our GA-trained approximate MLPs at ≤5% accuracy
-loss — accuracy, area, power, and reduction factors vs. the exact baseline."""
+loss — accuracy, area, power, and reduction factors vs. the exact baseline,
+reported as mean±std over ``common.N_SEEDS`` GA seeds (one vmapped
+``engine.run_batch`` dispatch per dataset)."""
 from __future__ import annotations
 
 import time
@@ -7,7 +9,8 @@ import time
 from repro.data import DATASETS
 from repro.core.area import HardwareCost
 
-from .common import bespoke_baseline, table_ii_point, ga_run, emit_row
+from .common import (bespoke_baseline, table_ii_points, emit_row, mean_std,
+                     N_SEEDS)
 
 PAPER_REDUCTION = {  # paper Table II area-reduction factors
     "breast_cancer": 288.0, "cardio": 19.3, "pendigits": 5.3,
@@ -16,29 +19,45 @@ PAPER_REDUCTION = {  # paper Table II area-reduction factors
 
 
 def run():
-    print("# Table II analog — ours at <=5% loss "
-          "(name,us_per_call,acc|area_red|power_red|paper_area_red)")
+    print("# Table II analog — ours at <=5% loss, mean±std over "
+          f"{N_SEEDS} seeds (name,us_per_call,acc|area_red|power_red|paper)")
     rows = {}
     for name in DATASETS:
         t0 = time.time()
         bb = bespoke_baseline(name)
-        point = table_ii_point(name)
+        points_all = table_ii_points(name)
+        points = [p for p in points_all if p is not None]
         us = (time.time() - t0) * 1e6
-        if point is None:
+        if not points:
             emit_row(f"table2/{name}", us, "NO_FEASIBLE_POINT")
             continue
-        acc, fa, cost, _ = point
         base = HardwareCost.from_fa(bb.fa_count)
-        area_red = base.area_cm2 / max(cost.area_cm2, 1e-9)
-        power_red = base.power_mw / max(cost.power_mw, 1e-9)
+        accs = [p[0] for p in points]
+        area_reds = [base.area_cm2 / max(p[2].area_cm2, 1e-9) for p in points]
+        power_reds = [base.power_mw / max(p[2].power_mw, 1e-9) for p in points]
+        (acc_m, acc_s) = mean_std(accs)
+        (ar_m, ar_s) = mean_std(area_reds)
+        (pr_m, pr_s) = mean_std(power_reds)
         emit_row(f"table2/{name}", us,
-                 f"acc={acc:.3f}|area_red={area_red:.1f}x|"
-                 f"power_red={power_red:.1f}x|paper={PAPER_REDUCTION[name]}x")
-        rows[name] = {"accuracy": acc, "fa": fa, "area_cm2": cost.area_cm2,
-                      "power_mw": cost.power_mw, "area_reduction": area_red,
-                      "power_reduction": power_red,
+                 f"acc={acc_m:.3f}±{acc_s:.3f}|area_red={ar_m:.1f}±{ar_s:.1f}x|"
+                 f"power_red={pr_m:.1f}±{pr_s:.1f}x|"
+                 f"paper={PAPER_REDUCTION[name]}x|seeds={len(points)}/{N_SEEDS}")
+        rows[name] = {"acc_mean": acc_m, "acc_std": acc_s,
+                      "area_reduction_mean": ar_m, "area_reduction_std": ar_s,
+                      "power_reduction_mean": pr_m, "power_reduction_std": pr_s,
+                      "n_feasible_seeds": len(points),
                       "baseline_acc": bb.accuracy}
-    mean_red = (sum(r["area_reduction"] for r in rows.values()) / len(rows)
+        if points_all[0] is not None:
+            # legacy scalar fields are strictly the SEED-0 point (the same
+            # view fig5/table_ii_point reports), mutually consistent —
+            # absent when seed 0 itself found no feasible design
+            acc, fa, cost, _ = points_all[0]
+            rows[name].update({
+                "accuracy": acc, "fa": fa, "area_cm2": cost.area_cm2,
+                "power_mw": cost.power_mw,
+                "area_reduction": base.area_cm2 / max(cost.area_cm2, 1e-9),
+                "power_reduction": base.power_mw / max(cost.power_mw, 1e-9)})
+    mean_red = (sum(r["area_reduction_mean"] for r in rows.values()) / len(rows)
                 if rows else 0)
     print(f"# mean area reduction: {mean_red:.1f}x (paper: 181x avg; >=5.3x min)")
     return rows

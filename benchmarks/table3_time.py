@@ -4,7 +4,10 @@ gradient-only vs GA(accuracy-only) vs GA(AxC, both objectives).
 The paper reports minutes on an EPYC 7552 for ~26M chromosome evaluations;
 this container is 1 CPU core, so we report wall seconds at bench scale plus
 evaluations/second (the scale-free number; the island model multiplies it by
-the device count)."""
+the device count). The AxC time is the amortized per-seed cost of the
+batched ``ga_run_multi`` sweep the other tables already ran — one
+``engine.run_batch`` dispatch covers all seeds, so no dataset is retrained
+just for this table."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,7 +17,8 @@ from repro.core import GAConfig, GATrainer
 from repro.core.genome import MLPTopology
 from repro.data import DATASETS
 
-from .common import dataset, float_baseline, ga_run, emit_row, GA_POP, GA_GENS
+from .common import (dataset, float_baseline, ga_run_multi, emit_row,
+                     GA_POP, GA_GENS)
 
 
 def run():
@@ -34,14 +38,18 @@ def run():
         tr_acc.run()
         ga_acc_s = time.time() - t0
 
-        _, _, ga_axc_s, evals = ga_run(name)
+        problem, per_seed, _, multi_wall = ga_run_multi(name)
+        cfg = problem.cfg
+        evals = ((cfg.generations + 1) * cfg.pop_size
+                 * int(problem.labels.shape[0]))
+        ga_axc_s = multi_wall / len(per_seed)       # amortized per seed
         eps = evals / max(ga_axc_s, 1e-9)
         emit_row(f"table3/{name}", ga_axc_s * 1e6,
                  f"grad={grad_s:.1f}s|ga_acc={ga_acc_s:.1f}s|"
                  f"ga_axc={ga_axc_s:.1f}s|evals={evals}|evals_per_s={eps:.0f}")
         rows[name] = {"grad_s": grad_s, "ga_acc_s": ga_acc_s,
                       "ga_axc_s": ga_axc_s, "evaluations": evals,
-                      "evals_per_s": eps}
+                      "evals_per_s": eps, "n_seeds": len(per_seed)}
     return rows
 
 

@@ -3,7 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py [dataset]
 
 float MLP → exact bespoke baseline → NSGA-II hardware-aware training →
-area/accuracy Pareto front → Verilog for the chosen design.
+area/accuracy Pareto front → Verilog for the chosen design, then the same
+search repeated over 3 seeds in ONE `engine.run_batch` dispatch (the paper
+reports statistics over repeated GA runs — this is how to get them without
+N sequential retrains).
 """
 import sys
 
@@ -13,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import (GAConfig, GATrainer, calibrated_seeds,
                         exact_bespoke_baseline, train_float_mlp,
                         best_within_loss, emit_verilog)
+from repro.core import engine
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.area import HardwareCost
 from repro.core.mlp import accuracy
@@ -64,6 +68,21 @@ def main():
     with open(path, "w") as f:
         f.write(emit_verilog(spec, g, name=f"{name}_mlp"))
     print(f"Verilog written to {path}")
+
+    # -- repeated-run statistics: 3 seeds, one vmapped dispatch -------------
+    n_seeds = 3
+    states, _, _ = engine.run_batch(trainer.problem, np.arange(n_seeds),
+                                    doping_seeds=seeds)
+    best_fas = []
+    for s in range(n_seeds):
+        front_s = engine.front_of(engine.state_at(states, s))
+        i = best_within_loss(front_s["objectives"], 1 - bb.accuracy, 0.05)
+        if i is not None:
+            best_fas.append(front_s["objectives"][i, 1])
+    if best_fas:
+        print(f"\n{len(best_fas)}/{n_seeds} seeds feasible (≤5% loss): "
+              f"FA = {np.mean(best_fas):.0f} ± {np.std(best_fas):.0f} "
+              f"(one engine.run_batch dispatch)")
 
 
 if __name__ == "__main__":

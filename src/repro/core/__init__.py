@@ -4,7 +4,8 @@ NSGA-II), plus the generalized hardware-approximation search used by the
 LM-scale architectures.
 """
 from .genome import MLPTopology, GenomeSpec
-from .trainer import GAConfig, GATrainer, GAState
+from .engine import GAConfig, GAState, Problem
+from .trainer import GATrainer
 from .area import (mlp_fa_count, population_area, baseline_mlp_fa,
                    HardwareCost, EGFET_FA_AREA_CM2, EGFET_FA_POWER_MW)
 from .mlp import mlp_forward, mlp_predict, accuracy, population_accuracy

@@ -1,0 +1,338 @@
+"""Pure functional GA engine: the single NSGA-II generation step shared by
+every trainer in the repo, plus whole-run batching.
+
+The paper's headline numbers (Tables I-III, Fig. 4) are statistics over
+repeated GA runs, so the engine is built as pure functions over two pytrees:
+
+  * :class:`Problem` — the (quantized inputs, labels, baseline accuracy)
+    data leaves plus the static ``GenomeSpec``/``GAConfig`` aux, and
+  * :class:`GAState` — one population's evolutionary state.
+
+Layers on top of these:
+
+  * :func:`generation`   — ONE (μ+λ) NSGA-II generation. This is the only
+    generation-step implementation in ``repro.core``; ``GATrainer`` and
+    ``islands.build_island_step`` are thin adapters over it.
+  * :func:`run_scanned`  — all generations as a single ``lax.scan`` dispatch.
+  * :func:`run_batch`    — ``jax.vmap`` of (init → scanned run) over a
+    leading seed axis: an N-seed sweep on one dataset is ONE dispatch with
+    batched PRNG keys, batched doping and per-run dedup, instead of N
+    sequential ``GATrainer.run`` calls (and N recompilations).
+
+Everything stays bit-identical to the pre-engine trainer/island loops:
+integer correct-counts are the only cached quantity (dedup), the float
+objective chain is elementwise (fusion cannot reassociate it), and the
+front-peel gemv in ``nsga2`` is integer-exact in float32 — so jit, scan,
+vmap and shard_map all produce the same states.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .genome import GenomeSpec, MLPTopology
+from .quantize import quantize_inputs
+from .mlp import counts_to_accuracy, population_accuracy
+from .area import population_area
+from .dedup import dedup_eval
+from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
+                    subset_ranking, survivor_select)
+from .operators import make_offspring
+from .pareto import pareto_front
+from ..kernels.pop_mlp import population_correct
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    pop_size: int = 256
+    generations: int = 150
+    crossover_rate: float = 0.7      # paper §V-A ("0.7")
+    mutation_rate_gene: float = 0.02  # paper's "0.2" read per-chromosome; see operators.py
+    doping_frac: float = 0.10        # paper §IV-A (~10 % nearly non-approximate)
+    max_acc_loss: float = 0.10       # paper §IV-A (10 % feasibility bound)
+    acc_only: bool = False           # Table III "GA" column: no area objective
+    seed: int = 0
+    log_every: int = 10
+    # -- fitness hot-path knobs (all bit-exact w.r.t. the naive loop) -------
+    fitness_backend: str = "auto"    # auto|kernel|interpret|ref|jnp
+    pop_tile: int = 64               # population tile ("ref" backend)
+    sample_tile: int = 256           # sample tile ("ref" backend)
+    dedup: bool = True               # duplicate-chromosome eval caching
+    scan: bool = True                # lax.scan over generations (one dispatch)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GAState:
+    pop: jnp.ndarray        # (P, n_genes) int32
+    obj: jnp.ndarray        # (P, 2) [error, area]
+    viol: jnp.ndarray       # (P,)
+    rank: jnp.ndarray       # (P,)
+    crowd: jnp.ndarray      # (P,)
+    counts: jnp.ndarray     # (P,) int32 correct counts (dedup reuse; zeros
+    #                         when dedup is off — obj/viol stay the source
+    #                         of truth for selection)
+    key: jnp.ndarray
+    gen: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.pop, self.obj, self.viol, self.rank, self.crowd,
+                self.counts, self.key, self.gen), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Problem:
+    """One (dataset, topology, config) GA problem as a pytree.
+
+    Array leaves (``x_int``, ``labels``, ``baseline_acc``) trace through
+    jit/vmap/shard_map; ``spec``/``cfg`` ride in the aux data as statics.
+    ``baseline_acc`` is a float32 scalar so a future config axis can batch
+    over it — subtracting it from a float32 accuracy is bit-identical to
+    the weakly-typed Python-float subtraction the stateful trainer used.
+    """
+    x_int: jnp.ndarray          # (S, n_in) int32 quantized inputs
+    labels: jnp.ndarray         # (S,) int32
+    baseline_acc: jnp.ndarray   # () float32
+    spec: GenomeSpec
+    cfg: GAConfig
+
+    def tree_flatten(self):
+        return (self.x_int, self.labels, self.baseline_acc), (self.spec, self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_data(cls, topo: MLPTopology, x01, labels, cfg: GAConfig = GAConfig(),
+                  baseline_acc: float | None = None,
+                  spec: GenomeSpec | None = None) -> "Problem":
+        """Build from float [0,1] features (chance-level baseline if None)."""
+        spec = spec if spec is not None else GenomeSpec(topo)
+        x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
+        return cls(x_int, jnp.asarray(labels, jnp.int32),
+                   jnp.float32(1.0 if baseline_acc is None else baseline_acc),
+                   spec, cfg)
+
+
+def use_dedup(cfg: GAConfig) -> bool:
+    """The "jnp" oracle has no n_valid_rows tile skip — dedup buys nothing."""
+    return cfg.dedup and cfg.fitness_backend != "jnp"
+
+
+# -- fitness ----------------------------------------------------------------
+
+def population_counts(problem: Problem, pop, n_valid=None):
+    """(N, G) → (N,) int32 correct counts via the dispatcher.
+
+    Rows at or past ``n_valid`` land in skipped tiles (dedup fast path)
+    and carry unspecified values — callers overwrite them. Dedup caches
+    these *integer* counts, never derived floats: the float objective
+    chain is then built once per generation on the actual children, so
+    XLA fusion decisions can't introduce ulp drift vs the naive loop."""
+    cfg = problem.cfg
+    return population_correct(
+        pop, problem.x_int, problem.labels, spec=problem.spec,
+        backend=cfg.fitness_backend, pop_tile=cfg.pop_tile,
+        sample_tile=cfg.sample_tile, n_valid_rows=n_valid)
+
+
+def counts_accuracy(problem: Problem, counts):
+    return counts_to_accuracy(counts, problem.labels.shape[0])
+
+
+def objectives(problem: Problem, pop, acc):
+    """(pop, accuracy) → ((N, 2) [error, area], (N,) violation)."""
+    cfg = problem.cfg
+    if cfg.acc_only:             # conventional GA training (Table III)
+        area = jnp.zeros_like(acc)
+    else:
+        area = population_area(problem.spec, pop).astype(jnp.float32)
+    obj = jnp.stack([1.0 - acc, area], axis=-1)
+    viol = jnp.maximum(0.0, (problem.baseline_acc - acc) - cfg.max_acc_loss)
+    return obj, viol
+
+
+def fitness(problem: Problem, pop):
+    """(N, G) → ((N, 2) objectives, (N,) violation) — non-dedup path."""
+    if problem.cfg.fitness_backend == "jnp":
+        acc = population_accuracy(problem.spec, pop, problem.x_int,
+                                  problem.labels)
+    else:
+        acc = counts_accuracy(problem, population_counts(problem, pop))
+    return objectives(problem, pop, acc)
+
+
+# -- init -------------------------------------------------------------------
+
+def _doping_array(doping_seeds):
+    if doping_seeds is None:
+        return None
+    if isinstance(doping_seeds, (jnp.ndarray, np.ndarray)):
+        return jnp.asarray(doping_seeds)
+    return jnp.asarray(np.stack([np.asarray(s) for s in doping_seeds]))
+
+
+def initial_population(problem: Problem, key, doping_seeds=None,
+                       pop_size: int | None = None):
+    """Random population doped with ~doping_frac nearly non-approximate
+    chromosomes (paper §IV-A). ``doping_seeds``: sequence of genomes or an
+    (n, n_genes) array; the same seeds dope every run of a batch."""
+    cfg = problem.cfg
+    P = cfg.pop_size if pop_size is None else pop_size
+    pop = problem.spec.random(key, P)
+    dope = _doping_array(doping_seeds)
+    if dope is not None:
+        n_dope = max(1, int(cfg.doping_frac * P))
+        reps = np.resize(np.arange(dope.shape[0]), n_dope)
+        pop = pop.at[:n_dope].set(dope[jnp.asarray(reps)])
+    return pop
+
+
+def initial_counts(problem: Problem, pop):
+    """Integer correct counts (+ rows actually evaluated) for an initial
+    population; doping replicates seeds, so dedup scores them once."""
+    if use_dedup(problem.cfg):
+        return dedup_eval(lambda rows, n: population_counts(problem, rows, n),
+                          pop)
+    return population_counts(problem, pop), jnp.int32(pop.shape[0])
+
+
+def init_state(problem: Problem, key, doping_seeds=None,
+               pop_size: int | None = None):
+    """Pure init: root PRNG key → (GAState, n_evaluated_rows).
+
+    Traceable end to end (``run_batch`` vmaps it); called eagerly it
+    reproduces the stateful trainer's init bit-for-bit — the counts are
+    integers (fusion-proof) and the float objective chain is elementwise.
+    """
+    cfg = problem.cfg
+    key, k_pop = jax.random.split(key)
+    pop = initial_population(problem, k_pop, doping_seeds, pop_size)
+    if cfg.fitness_backend == "jnp":
+        counts = jnp.zeros((pop.shape[0],), jnp.int32)
+        n_eval = jnp.int32(pop.shape[0])
+        obj, viol = fitness(problem, pop)
+    else:
+        counts, n_eval = initial_counts(problem, pop)
+        obj, viol = objectives(problem, pop, counts_accuracy(problem, counts))
+    rank, crowd = evaluate_ranking(obj, viol)
+    return GAState(pop, obj, viol, rank, crowd, counts, key,
+                   jnp.int32(0)), n_eval
+
+
+# -- the generation step ----------------------------------------------------
+
+def generation(problem: Problem, state: GAState):
+    """One (μ+λ) NSGA-II generation; returns (state, aux) where aux is
+    (best_err, best_area, n_evaluated_rows).
+
+    THE single generation-step implementation: ``GATrainer`` jits/scans it
+    directly and each island runs it locally under ``shard_map`` (the
+    population size is taken from the state, so islands evolve their
+    ``island_pop``-sized shard with the same code).
+    """
+    cfg = problem.cfg
+    P = state.pop.shape[0]
+    key, k_off = jax.random.split(state.key)
+    children = make_offspring(k_off, state.pop, state.rank, state.crowd,
+                              problem.spec, cfg.crossover_rate,
+                              cfg.mutation_rate_gene)
+    pop = jnp.concatenate([state.pop, children], axis=0)
+    if use_dedup(cfg):
+        # count only children that duplicate neither a parent nor each
+        # other; everything else reuses cached integer counts
+        counts, n_eval = dedup_eval(
+            lambda rows, n: population_counts(problem, rows, n),
+            pop, known=state.counts)
+        c_obj, c_viol = objectives(problem, children,
+                                   counts_accuracy(problem, counts[P:]))
+    else:
+        counts = jnp.zeros((2 * P,), jnp.int32)
+        c_obj, c_viol = fitness(problem, children)
+        n_eval = jnp.int32(P)
+    obj = jnp.concatenate([state.obj, c_obj], axis=0)
+    viol = jnp.concatenate([state.viol, c_viol], axis=0)
+    dom = dominance_matrix(obj, viol)
+    rank, crowd = ranking_from_dom(dom, obj)
+    keep = survivor_select(rank, crowd, P)
+    rank2, crowd2 = subset_ranking(dom, obj, keep)
+    new = GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
+                  counts[keep], key, state.gen + 1)
+    aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval)
+    return new, aux
+
+
+def run_scanned(problem: Problem, state: GAState, generations: int):
+    """All ``generations`` as one ``lax.scan`` dispatch.
+
+    Returns (final state, aux) with aux = (best_err, best_area, n_eval),
+    each of shape (generations,)."""
+    def body(s, _):
+        return generation(problem, s)
+
+    return jax.lax.scan(body, state, None, length=generations)
+
+
+# -- whole-run batching over seeds ------------------------------------------
+
+def _run_batch(problem: Problem, seeds, doping, generations: int):
+    def one(seed):
+        state, n0 = init_state(problem, jax.random.PRNGKey(seed), doping)
+        state, aux = run_scanned(problem, state, generations)
+        return state, aux, n0
+
+    return jax.vmap(one)(seeds)
+
+
+_run_batch_jit = jax.jit(_run_batch, static_argnames="generations")
+
+
+def run_batch(problem: Problem, seeds, generations: int | None = None,
+              doping_seeds=None, jit: bool = True):
+    """vmap whole scanned runs over a leading seed axis — ONE dispatch.
+
+    seeds: (N,) integer PRNG seeds, one independent GA run each.
+    Returns (states, aux, init_evals): every GAState leaf and aux entry
+    gains a leading (N,) axis; use ``state_at``/``front_of`` to peel runs.
+
+    Results are bit-identical to a Python loop of per-seed
+    ``init_state`` + ``run_scanned`` calls, dedup on or off: counts are
+    integers, the tile-skip ``lax.cond`` becomes a select under vmap
+    (both branches run, the chosen values are unchanged), and the
+    ranking gemv/while_loop are integer-exact under batching. One caveat:
+    a reference loop must pass ``problem`` as a jit *argument* (as this
+    function does) — closing over it turns ``baseline_acc`` into a
+    compile-time constant, and XLA's constant folding then rounds the
+    violation chain differently by an ulp.
+    """
+    gens = problem.cfg.generations if generations is None else generations
+    seeds = jnp.asarray(seeds, jnp.int32)
+    doping = _doping_array(doping_seeds)
+    fn = _run_batch_jit if jit else _run_batch
+    return fn(problem, seeds, doping, gens)
+
+
+def state_at(states: GAState, i: int) -> GAState:
+    """Peel run ``i`` off a batched GAState."""
+    return jax.tree_util.tree_map(lambda a: a[i], states)
+
+
+# -- host-side output -------------------------------------------------------
+
+def front_of(state: GAState):
+    """Feasible estimated Pareto front (paper Fig. 2 output)."""
+    obj = np.asarray(state.obj)
+    pops = np.asarray(state.pop)
+    feas = np.asarray(state.viol) <= 0
+    if not feas.any():
+        feas = np.ones_like(feas)
+    return pareto_front(obj[feas], extras={"genomes": pops[feas]})

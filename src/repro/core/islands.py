@@ -5,18 +5,26 @@ embarrassingly parallel, so at pod scale we shard the population into one
 island per device along the ``data`` (and ``pod``) mesh axes with
 ``shard_map``:
 
-  * each island runs the full NSGA-II generation locally (no collectives),
+  * each island runs the full NSGA-II generation locally (no collectives)
+    through the shared ``repro.core.engine`` — ``engine.generation`` is the
+    same step ``GATrainer`` scans, applied to the island's
+    ``island_pop``-sized shard,
   * every ``migrate_every`` generations the best ``n_migrants`` chromosomes
     hop to the next island on a ring (``lax.ppermute``) and replace the
-    locals' worst,
-  * the final global Pareto front is an ``all_gather`` + host-side peel.
+    locals' worst — on a single device the ring is degenerate and migration
+    is skipped outright, so a 1-island run is bit-for-bit a ``GATrainer``
+    run of the same seed,
+  * the final global Pareto front is an ``all_gather`` + host-side peel of
+    the *feasible* chromosomes (same all-feasible fallback as
+    ``GATrainer.front``).
 
-Fitness goes through the ``population_correct`` dispatcher (kernel on TPU,
-tiled jnp elsewhere — ``GAConfig.fitness_backend``); objectives are carried
-across rounds and travel with migrants over the ring, so only children are
-ever scored (with duplicate-chromosome dedup, ``GAConfig.dedup``), and the
-survivor re-ranking reuses the combined pool's dominance matrix — all
-bit-exact w.r.t. re-evaluating everything.
+Island ``i`` initializes exactly like ``GATrainer`` with seed ``seed + i``
+(independent doped populations through ``engine.init_state``). Fitness goes
+through the ``population_correct`` dispatcher (kernel on TPU, tiled jnp
+elsewhere — ``GAConfig.fitness_backend``); objectives are carried across
+rounds and travel with migrants over the ring, so only children are ever
+scored (with duplicate-chromosome dedup, ``GAConfig.dedup``) — all bit-exact
+w.r.t. re-evaluating everything.
 
 The same code runs on 1 CPU device (degenerate ring) and on the 512-device
 dry-run mesh; ``launch/dryrun.py`` lowers it for the production meshes.
@@ -24,7 +32,6 @@ dry-run mesh; ``launch/dryrun.py`` lowers it for the production meshes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import numpy as np
 import jax
@@ -34,15 +41,10 @@ from jax.experimental.shard_map import shard_map
 
 from .genome import GenomeSpec, MLPTopology
 from .quantize import quantize_inputs
-from .area import population_area
-from .mlp import counts_to_accuracy
-from .dedup import dedup_eval
-from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
-                    subset_ranking, survivor_select)
-from .operators import make_offspring
+from .nsga2 import evaluate_ranking
 from .pareto import pareto_front
-from .trainer import GAConfig
-from ..kernels.pop_mlp import population_correct
+from . import engine
+from .engine import GAConfig, GAState, Problem
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,32 +56,6 @@ class IslandConfig:
     rounds: int = 10              # migration rounds; total gens = rounds × migrate_every
 
 
-def _local_generation(spec: GenomeSpec, cfg: GAConfig, counts_fn, obj_fn,
-                      carry, _):
-    pop, obj, viol, counts, rank, crowd, key = carry
-    P = pop.shape[0]
-    key, k_off = jax.random.split(key)
-    children = make_offspring(k_off, pop, rank, crowd, spec,
-                              cfg.crossover_rate, cfg.mutation_rate_gene)
-    pop_a = jnp.concatenate([pop, children], axis=0)
-    if cfg.dedup:
-        # dedup caches *integer* counts; the float objective chain is built
-        # on the actual children so fusion can't introduce ulp drift
-        counts_a, _ = dedup_eval(counts_fn, pop_a, known=counts)
-        c_obj, c_viol = obj_fn(children, counts_a[P:])
-    else:
-        counts_a = jnp.zeros((2 * P,), jnp.int32)
-        c_obj, c_viol = obj_fn(children, counts_fn(children, None))
-    obj_a = jnp.concatenate([obj, c_obj], axis=0)
-    viol_a = jnp.concatenate([viol, c_viol], axis=0)
-    dom = dominance_matrix(obj_a, viol_a)
-    r, c = ranking_from_dom(dom, obj_a)
-    keep = survivor_select(r, c, P)
-    pop, obj, viol, counts = pop_a[keep], obj_a[keep], viol_a[keep], counts_a[keep]
-    rank, crowd = subset_ranking(dom, obj_a, keep)
-    return (pop, obj, viol, counts, rank, crowd, key), None
-
-
 def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
                       x_int, labels, baseline_acc: float,
                       axis_names: tuple[str, ...] = ("data",)):
@@ -87,94 +63,98 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
 
     The population and its objectives live as global arrays
     (n_devices × island_pop leading axis) sharded over ``axis_names``;
-    ``init_fn`` scores the initial population once and every later score
-    happens island-locally on children only.
+    ``init_fn`` scores each island's initial population once and every
+    later score happens island-locally on children only.
     """
-    ga = cfg.ga
-
-    def counts_fn(pop, n_valid=None):
-        return population_correct(pop, x_int, labels, spec=spec,
-                                  backend=ga.fitness_backend,
-                                  pop_tile=ga.pop_tile,
-                                  sample_tile=ga.sample_tile,
-                                  n_valid_rows=n_valid)
-
-    def obj_fn(pop, counts):
-        acc = counts_to_accuracy(counts, labels.shape[0])
-        area = population_area(spec, pop).astype(jnp.float32)
-        obj = jnp.stack([1.0 - acc, area], axis=-1)
-        viol = jnp.maximum(0.0, (baseline_acc - acc) - ga.max_acc_loss)
-        return obj, viol
-
-    gen = partial(_local_generation, spec, ga, counts_fn, obj_fn)
+    problem = Problem(jnp.asarray(x_int), jnp.asarray(labels, jnp.int32),
+                      jnp.float32(baseline_acc), spec, cfg.ga)
     n_axis = int(np.prod([mesh.shape[a] for a in axis_names]))
 
-    def island_round(pop, obj, viol, counts, key):
+    def island_round(pop, obj, viol, counts, rank, crowd, key):
         """Local shard view: pop (island_pop, genes), obj (island_pop, 2),
-        viol/counts (island_pop,), key (1, 2) uint32 (the leading shard
-        axis stays — strip it for jax.random)."""
+        viol/counts/rank/crowd (island_pop,), key (1, 2) uint32 (the
+        leading shard axis stays — strip it for jax.random)."""
         key = key[0]
-        rank, crowd = evaluate_ranking(obj, viol)
-        carry = (pop, obj, viol, counts, rank, crowd, key)
-        carry, _ = jax.lax.scan(gen, carry, None, length=cfg.migrate_every)
-        pop, obj, viol, counts, rank, crowd, key = carry
+        state = GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
+        state, _ = engine.run_scanned(problem, state, cfg.migrate_every)
+        pop, obj, viol, counts = state.pop, state.obj, state.viol, state.counts
+        rank, crowd, key = state.rank, state.crowd, state.key
 
-        # --- ring migration: send my best n_migrants to the next island ---
-        # objectives are deterministic in the genome, so they travel with it
-        order = jnp.lexsort((-crowd, rank))
-        best = order[: cfg.n_migrants]
-        payload = (pop[best], obj[best], viol[best], counts[best])
-        axis = axis_names[-1]
-        perm = [(i, (i + 1) % mesh.shape[axis]) for i in range(mesh.shape[axis])]
-        payload = jax.lax.ppermute(payload, axis, perm)
-        if len(axis_names) > 1:   # cross-pod ring on the slower axis too
-            perm0 = [(i, (i + 1) % mesh.shape[axis_names[0]])
-                     for i in range(mesh.shape[axis_names[0]])]
-            payload = jax.lax.ppermute(payload, axis_names[0], perm0)
-        worst = order[-cfg.n_migrants:]
-        pop = pop.at[worst].set(payload[0])
-        obj = obj.at[worst].set(payload[1])
-        viol = viol.at[worst].set(payload[2])
-        counts = counts.at[worst].set(payload[3])
-        return pop, obj, viol, counts, key[None]
+        if n_axis > 1:
+            # --- ring migration: send my best n_migrants to the next island
+            # (objectives are deterministic in the genome, so they travel
+            # with it; a 1-island ring would only clone best over worst,
+            # so the degenerate case skips migration entirely) ---
+            order = jnp.lexsort((-crowd, rank))
+            best = order[: cfg.n_migrants]
+            payload = (pop[best], obj[best], viol[best], counts[best])
+            axis = axis_names[-1]
+            perm = [(i, (i + 1) % mesh.shape[axis])
+                    for i in range(mesh.shape[axis])]
+            payload = jax.lax.ppermute(payload, axis, perm)
+            if len(axis_names) > 1:   # cross-pod ring on the slower axis too
+                perm0 = [(i, (i + 1) % mesh.shape[axis_names[0]])
+                         for i in range(mesh.shape[axis_names[0]])]
+                payload = jax.lax.ppermute(payload, axis_names[0], perm0)
+            worst = order[-cfg.n_migrants:]
+            pop = pop.at[worst].set(payload[0])
+            obj = obj.at[worst].set(payload[1])
+            viol = viol.at[worst].set(payload[2])
+            counts = counts.at[worst].set(payload[3])
+            # migration invalidated the ranking — recompute for next round
+            # (the degenerate ring keeps the scan's rank/crowd, which equal
+            # a recompute bit-for-bit: nsga2.subset_ranking equivalence)
+            rank, crowd = evaluate_ranking(obj, viol)
+        return pop, obj, viol, counts, rank, crowd, key[None]
 
     pspec = P(axis_names)
     sharded_round = shard_map(
         island_round, mesh=mesh,
-        in_specs=(pspec, pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec, pspec, pspec, pspec),
+        in_specs=(pspec,) * 7,
+        out_specs=(pspec,) * 7,
         check_rep=False,
     )
 
-    def init(seed: int):
-        key = jax.random.PRNGKey(seed)
-        k_pop, k_isl = jax.random.split(key)
-        pop = spec.random(k_pop, n_axis * cfg.island_pop)
-        if ga.dedup:
-            counts, _ = dedup_eval(counts_fn, pop)
-        else:
-            counts = counts_fn(pop)
-        obj, viol = obj_fn(pop, counts)
-        keys = jax.random.split(k_isl, n_axis)
-        return pop, obj, viol, counts, keys
+    def init(seed: int, doping_seeds=None):
+        # island i == GATrainer(seed + i)'s initial state, all islands in
+        # one vmapped dispatch (512 islands ≠ 512 sequential inits). Eager
+        # on purpose: batched elementwise ops round exactly like a
+        # per-island loop, whereas jit would constant-fold the float
+        # objective chain differently by an ulp (see engine.run_batch)
+        states = jax.vmap(
+            lambda s: engine.init_state(problem, jax.random.PRNGKey(s),
+                                        doping_seeds, cfg.island_pop)[0]
+        )(seed + jnp.arange(n_axis))
+        P_glob = n_axis * cfg.island_pop
+        return (states.pop.reshape(P_glob, -1), states.obj.reshape(P_glob, 2),
+                states.viol.reshape(P_glob), states.counts.reshape(P_glob),
+                states.rank.reshape(P_glob), states.crowd.reshape(P_glob),
+                states.key)
 
     return init, jax.jit(sharded_round)
 
 
 def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,
                 cfg: IslandConfig = IslandConfig(), baseline_acc: float = 1.0,
-                axis_names: tuple[str, ...] = ("data",), seed: int = 0):
+                axis_names: tuple[str, ...] = ("data",), seed: int = 0,
+                doping_seeds=None):
     """Drive ``rounds`` migration rounds and return the global Pareto front."""
     spec = GenomeSpec(topo)
     x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
     labels = jnp.asarray(labels, jnp.int32)
     init, round_fn = build_island_step(spec, cfg, mesh, x_int, labels,
                                        baseline_acc, axis_names)
-    pop, obj, viol, counts, keys = init(seed)
+    carry = init(seed, doping_seeds)
     for _ in range(cfg.rounds):
-        pop, obj, viol, counts, keys = round_fn(pop, obj, viol, counts, keys)
+        carry = round_fn(*carry)
+    pop, obj, viol, counts, _, _, _ = carry
     pop = np.asarray(jax.device_get(pop))
 
-    # global Pareto peel on host — objectives were carried, not recomputed
+    # global Pareto peel on host — objectives were carried, not recomputed;
+    # infeasible chromosomes (viol > 0) are dropped first, with the same
+    # all-feasible fallback as GATrainer.front
     obj = np.asarray(jax.device_get(obj), np.float64)
-    return pareto_front(obj, extras={"genomes": pop}), spec
+    feas = np.asarray(jax.device_get(viol)) <= 0
+    if not feas.any():
+        feas = np.ones_like(feas)
+    return pareto_front(obj[feas], extras={"genomes": pop[feas]}), spec

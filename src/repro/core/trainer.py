@@ -5,21 +5,22 @@ Area(θ) in FAs]; constraint (paper §IV-A): accuracy ≥ baseline − max_acc_l
 (10 %); init (paper §IV-A): random population doped with ~10 % nearly
 non-approximate chromosomes from a float MLP.
 
-The fitness hot loop (the paper's ~26 M chromosome evaluations) runs through
-the ``repro.kernels.pop_mlp.population_correct`` dispatcher — Pallas kernel
-on TPU, sample/population-tiled jnp elsewhere — selected by
-``GAConfig.fitness_backend``. Generations execute as a single ``lax.scan``
-dispatch (``GAConfig.scan``), only children are ever scored (parent
-objectives ride in ``GAState``), duplicate children reuse cached objectives
-(``GAConfig.dedup``, see ``repro.core.dedup``), and survivor re-ranking
-reuses the combined pool's dominance matrix. All of these are bit-exact
-w.r.t. the naive loop.
-
-The distributed (island) variant lives in ``repro.core.islands``.
+``GATrainer`` is a thin stateful adapter over the pure functional engine in
+``repro.core.engine``: the NSGA-II generation step, the scanned whole-run
+loop and the init all live there (and are shared, bit-for-bit, with the
+island trainer in ``repro.core.islands`` and the multi-seed batched runner
+``engine.run_batch``). The fitness hot loop (the paper's ~26 M chromosome
+evaluations) runs through the ``repro.kernels.pop_mlp.population_correct``
+dispatcher — Pallas kernel on TPU, sample/population-tiled jnp elsewhere —
+selected by ``GAConfig.fitness_backend``. Generations execute as a single
+``lax.scan`` dispatch (``GAConfig.scan``), only children are ever scored
+(parent objectives ride in ``GAState``), duplicate children reuse cached
+objectives (``GAConfig.dedup``, see ``repro.core.dedup``), and survivor
+re-ranking reuses the combined pool's dominance matrix. All of these are
+bit-exact w.r.t. the naive loop.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Optional, Sequence
 
@@ -27,58 +28,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .genome import GenomeSpec, MLPTopology
-from .quantize import quantize_inputs
-from .mlp import counts_to_accuracy, population_accuracy
-from .area import population_area
-from .dedup import dedup_eval
-from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
-                    subset_ranking, survivor_select)
-from .operators import make_offspring
-from .pareto import pareto_front
-from ..kernels.pop_mlp import population_correct
-
-
-@dataclasses.dataclass(frozen=True)
-class GAConfig:
-    pop_size: int = 256
-    generations: int = 150
-    crossover_rate: float = 0.7      # paper §V-A ("0.7")
-    mutation_rate_gene: float = 0.02  # paper's "0.2" read per-chromosome; see operators.py
-    doping_frac: float = 0.10        # paper §IV-A (~10 % nearly non-approximate)
-    max_acc_loss: float = 0.10       # paper §IV-A (10 % feasibility bound)
-    acc_only: bool = False           # Table III "GA" column: no area objective
-    seed: int = 0
-    log_every: int = 10
-    # -- fitness hot-path knobs (all bit-exact w.r.t. the naive loop) -------
-    fitness_backend: str = "auto"    # auto|kernel|interpret|ref|jnp
-    pop_tile: int = 64               # population tile ("ref" backend)
-    sample_tile: int = 256           # sample tile ("ref" backend)
-    dedup: bool = True               # duplicate-chromosome eval caching
-    scan: bool = True                # lax.scan over generations (one dispatch)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class GAState:
-    pop: jnp.ndarray        # (P, n_genes) int32
-    obj: jnp.ndarray        # (P, 2) [error, area]
-    viol: jnp.ndarray       # (P,)
-    rank: jnp.ndarray       # (P,)
-    crowd: jnp.ndarray      # (P,)
-    counts: jnp.ndarray     # (P,) int32 correct counts (dedup reuse; zeros
-    #                         when dedup is off — obj/viol stay the source
-    #                         of truth for selection)
-    key: jnp.ndarray
-    gen: jnp.ndarray
-
-    def tree_flatten(self):
-        return (self.pop, self.obj, self.viol, self.rank, self.crowd,
-                self.counts, self.key, self.gen), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
+from .genome import MLPTopology
+from .nsga2 import evaluate_ranking
+from . import engine
+from .engine import GAConfig, GAState, Problem   # noqa: F401  (re-exported API)
 
 
 class GATrainer:
@@ -88,113 +41,40 @@ class GATrainer:
                  baseline_acc: float | None = None,
                  doping_seeds: Optional[Sequence[np.ndarray]] = None):
         self.topo = topo
-        self.spec = GenomeSpec(topo)
         self.cfg = cfg
-        self.x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
-        self.labels = jnp.asarray(labels, jnp.int32)
         # chance-level baseline if no float model is supplied
         self.baseline_acc = float(baseline_acc) if baseline_acc is not None else 1.0
+        self.problem = Problem.from_data(topo, x01, labels, cfg,
+                                         baseline_acc=self.baseline_acc)
+        self.spec = self.problem.spec
+        self.x_int = self.problem.x_int
+        self.labels = self.problem.labels
         self.doping_seeds = doping_seeds
-        # the "jnp" oracle has no n_valid_rows tile skip — dedup buys nothing
-        self._dedup = cfg.dedup and cfg.fitness_backend != "jnp"
-        self._step = jax.jit(lambda s: self._generation(s)[0])
+        self._step = jax.jit(lambda s: engine.generation(self.problem, s)[0])
         # jit only the *integer* counts for init: the float objective chain
         # stays eager, exactly as the seed trainer computed it (jitting it
-        # perturbs ulps via fusion)
-        self._init_counts = jax.jit(self._init_counts_impl)
+        # perturbs ulps via fusion); jit-vs-eager integer counts are
+        # identical, so this is a pure init-latency optimization over
+        # running engine.init_state eagerly
+        self._init_counts = jax.jit(
+            lambda pop: engine.initial_counts(self.problem, pop))
         self._scan_cache: dict[int, object] = {}
 
-    # -- fitness -----------------------------------------------------------
-    def _counts(self, pop, n_valid=None):
-        """(N, G) → (N,) int32 correct counts via the dispatcher.
-
-        Rows at or past ``n_valid`` land in skipped tiles (dedup fast path)
-        and carry unspecified values — callers overwrite them. Dedup caches
-        these *integer* counts, never derived floats: the float objective
-        chain is then built once per generation on the actual children, so
-        XLA fusion decisions can't introduce ulp drift vs the naive loop."""
-        return population_correct(
-            pop, self.x_int, self.labels, spec=self.spec,
-            backend=self.cfg.fitness_backend, pop_tile=self.cfg.pop_tile,
-            sample_tile=self.cfg.sample_tile, n_valid_rows=n_valid)
-
-    def _objectives(self, pop, acc):
-        if self.cfg.acc_only:        # conventional GA training (Table III)
-            area = jnp.zeros_like(acc)
-        else:
-            area = population_area(self.spec, pop).astype(jnp.float32)
-        obj = jnp.stack([1.0 - acc, area], axis=-1)
-        viol = jnp.maximum(0.0, (self.baseline_acc - acc) - self.cfg.max_acc_loss)
-        return obj, viol
-
-    def _acc_of_counts(self, counts):
-        return counts_to_accuracy(counts, self.labels.shape[0])
-
-    def _fitness(self, pop):
-        """(N, G) → ((N, 2) objectives, (N,) violation) — non-dedup path."""
-        if self.cfg.fitness_backend == "jnp":
-            acc = population_accuracy(self.spec, pop, self.x_int, self.labels)
-        else:
-            acc = self._acc_of_counts(self._counts(pop))
-        return self._objectives(pop, acc)
-
-    # -- generation step (jit/scan body) -----------------------------------
-    def _generation(self, state: GAState):
-        """One (μ+λ) NSGA-II generation; returns (state, aux) where aux is
-        (best_err, best_area, n_evaluated_rows)."""
-        P = self.cfg.pop_size
-        key, k_off = jax.random.split(state.key)
-        children = make_offspring(k_off, state.pop, state.rank, state.crowd,
-                                  self.spec, self.cfg.crossover_rate,
-                                  self.cfg.mutation_rate_gene)
-        pop = jnp.concatenate([state.pop, children], axis=0)
-        if self._dedup:
-            # count only children that duplicate neither a parent nor each
-            # other; everything else reuses cached integer counts
-            counts, n_eval = dedup_eval(
-                lambda rows, n: self._counts(rows, n_valid=n),
-                pop, known=state.counts)
-            c_obj, c_viol = self._objectives(
-                children, self._acc_of_counts(counts[P:]))
-        else:
-            counts = jnp.zeros((2 * P,), jnp.int32)
-            c_obj, c_viol = self._fitness(children)
-            n_eval = jnp.int32(P)
-        obj = jnp.concatenate([state.obj, c_obj], axis=0)
-        viol = jnp.concatenate([state.viol, c_viol], axis=0)
-        dom = dominance_matrix(obj, viol)
-        rank, crowd = ranking_from_dom(dom, obj)
-        keep = survivor_select(rank, crowd, P)
-        rank2, crowd2 = subset_ranking(dom, obj, keep)
-        new = GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
-                      counts[keep], key, state.gen + 1)
-        aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval)
-        return new, aux
-
     # -- init ---------------------------------------------------------------
-    def _init_counts_impl(self, pop):
-        if self._dedup:              # doping replicates seeds — score them once
-            return dedup_eval(
-                lambda rows, n: self._counts(rows, n_valid=n), pop)
-        return self._counts(pop), jnp.int32(pop.shape[0])
-
     def init_state(self) -> GAState:
-        key = jax.random.PRNGKey(self.cfg.seed)
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
         key, k_pop = jax.random.split(key)
-        pop = self.spec.random(k_pop, self.cfg.pop_size)
-        if self.doping_seeds is not None:
-            n_dope = max(1, int(self.cfg.doping_frac * self.cfg.pop_size))
-            seeds = np.stack([np.asarray(s) for s in self.doping_seeds])
-            reps = np.resize(np.arange(len(seeds)), n_dope)
-            pop = pop.at[:n_dope].set(jnp.asarray(seeds[reps]))
-        if self.cfg.fitness_backend == "jnp":
-            counts = jnp.zeros((self.cfg.pop_size,), jnp.int32)
-            self._init_unique_evals = self.cfg.pop_size
-            obj, viol = self._fitness(pop)
+        pop = engine.initial_population(self.problem, k_pop, self.doping_seeds)
+        if cfg.fitness_backend == "jnp":
+            counts = jnp.zeros((pop.shape[0],), jnp.int32)
+            self._init_unique_evals = pop.shape[0]
+            obj, viol = engine.fitness(self.problem, pop)
         else:
             counts, n_eval = self._init_counts(pop)
             self._init_unique_evals = int(n_eval)
-            obj, viol = self._objectives(pop, self._acc_of_counts(counts))
+            obj, viol = engine.objectives(
+                self.problem, pop, engine.counts_accuracy(self.problem, counts))
         rank, crowd = evaluate_ranking(obj, viol)
         return GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
 
@@ -219,12 +99,8 @@ class GATrainer:
         if scan and gens > 0:
             runner = self._scan_cache.get(gens)
             if runner is None:
-                def body(s, _):
-                    s2, aux = self._generation(s)
-                    return s2, aux
-
                 runner = jax.jit(
-                    lambda s: jax.lax.scan(body, s, None, length=gens))
+                    lambda s: engine.run_scanned(self.problem, s, gens))
                 self._scan_cache[gens] = runner
             state, (best_err, best_area, n_eval) = runner(state)
             jax.block_until_ready(state.pop)
@@ -260,9 +136,4 @@ class GATrainer:
 
     def front(self, state: GAState):
         """Feasible estimated Pareto front (paper Fig. 2 output)."""
-        obj = np.asarray(state.obj)
-        pops = np.asarray(state.pop)
-        feas = np.asarray(state.viol) <= 0
-        if not feas.any():
-            feas = np.ones_like(feas)
-        return pareto_front(obj[feas], extras={"genomes": pops[feas]})
+        return engine.front_of(state)

@@ -1,0 +1,140 @@
+"""The functional GA engine: one NSGA-II generation step shared bit-for-bit
+by GATrainer and the island trainer, and whole-run vmap batching over seeds
+(`engine.run_batch`) matching a Python loop of per-seed scanned runs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import GAConfig, GATrainer
+from repro.core import engine
+from repro.core.genome import MLPTopology
+from repro.core.islands import IslandConfig, run_islands
+
+
+STATE_FIELDS = ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen")
+
+
+def assert_states_equal(a, b, msg=""):
+    for name in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{msg}: GAState.{name} differs")
+
+
+# -- trainer ↔ islands equivalence ------------------------------------------
+
+def test_single_island_matches_trainer_bitwise(bc_dataset):
+    """Degenerate ring (1 device, migrate_every == gens): the island run and
+    a GATrainer run of the same seed go through the same engine step and
+    must produce the identical Pareto front, bit for bit."""
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    cfg = GAConfig(pop_size=16, generations=6, seed=3)
+    tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
+    state, _ = tr.run()
+    f_tr = tr.front(state)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    icfg = IslandConfig(ga=cfg, island_pop=cfg.pop_size,
+                        migrate_every=cfg.generations, n_migrants=2, rounds=1)
+    f_is, _ = run_islands(topo, ds.x_train, ds.y_train, mesh, icfg,
+                          seed=cfg.seed)
+    np.testing.assert_array_equal(f_tr["objectives"], f_is["objectives"])
+    np.testing.assert_array_equal(f_tr["genomes"], f_is["genomes"])
+
+
+def test_single_island_peel_filters_infeasible(bc_dataset, bc_float):
+    """run_islands drops viol > 0 rows before the global peel (with the
+    all-feasible fallback), exactly like GATrainer.front."""
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    # a real baseline makes the feasibility bound bite
+    cfg = GAConfig(pop_size=16, generations=6, seed=1)
+    tr = GATrainer(topo, ds.x_train, ds.y_train, cfg,
+                   baseline_acc=bc_float.train_acc)
+    state, _ = tr.run()
+    f_tr = tr.front(state)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    icfg = IslandConfig(ga=cfg, island_pop=cfg.pop_size,
+                        migrate_every=cfg.generations, n_migrants=2, rounds=1)
+    f_is, _ = run_islands(topo, ds.x_train, ds.y_train, mesh, icfg,
+                          baseline_acc=bc_float.train_acc, seed=cfg.seed)
+    np.testing.assert_array_equal(f_tr["objectives"], f_is["objectives"])
+    np.testing.assert_array_equal(f_tr["genomes"], f_is["genomes"])
+
+
+# -- batched whole-run vmap --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bc_problem(bc_dataset):
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+
+    def make(**kw):
+        cfg = GAConfig(pop_size=16, generations=5, **kw)
+        return engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+
+    return make
+
+
+@jax.jit
+def _loop_run(problem, seed):
+    # reference: one seed, init + scanned run. `problem` must be a jit
+    # argument (not a closure constant) — see engine.run_batch docstring.
+    state, n0 = engine.init_state(problem, jax.random.PRNGKey(seed))
+    state, aux = engine.run_scanned(problem, state,
+                                    problem.cfg.generations)
+    return state, aux, n0
+
+
+@pytest.mark.parametrize("dedup", [True, False])
+def test_run_batch_matches_seed_loop(bc_problem, dedup):
+    problem = bc_problem(dedup=dedup)
+    seeds = [0, 1, 2]
+    states, aux, n0 = engine.run_batch(problem, seeds)
+    for i, s in enumerate(seeds):
+        ref_state, ref_aux, ref_n0 = _loop_run(problem, jnp.int32(s))
+        assert_states_equal(engine.state_at(states, i), ref_state,
+                            msg=f"seed {s}, dedup={dedup}")
+        for k in range(3):
+            np.testing.assert_array_equal(np.asarray(aux[k][i]),
+                                          np.asarray(ref_aux[k]))
+        assert int(n0[i]) == int(ref_n0)
+
+
+def test_run_batch_with_doping_matches_trainer_inits(bc_dataset, bc_float,
+                                                     bc_spec):
+    """Batched doped init equals each per-seed doped init (same doping
+    seeds broadcast over the batch)."""
+    from repro.core import calibrated_seeds
+
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    doping = calibrated_seeds(bc_spec, bc_float, ds.x_train)
+    cfg = GAConfig(pop_size=16, generations=3)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg,
+                                       baseline_acc=bc_float.train_acc)
+    states, _, _ = engine.run_batch(problem, [0, 1], doping_seeds=doping)
+
+    @jax.jit
+    def one(pb, seed, dope):
+        state, _ = engine.init_state(pb, jax.random.PRNGKey(seed), dope)
+        state, _ = engine.run_scanned(pb, state, cfg.generations)
+        return state
+
+    dope = jnp.asarray(np.stack([np.asarray(s) for s in doping]))
+    for i, s in enumerate([0, 1]):
+        assert_states_equal(engine.state_at(states, i),
+                            one(problem, jnp.int32(s), dope),
+                            msg=f"doped seed {s}")
+
+
+def test_run_batch_seeds_are_independent(bc_problem):
+    """Different seeds explore different populations (sanity on the batched
+    PRNG fan-out)."""
+    problem = bc_problem()
+    states, _, _ = engine.run_batch(problem, [0, 7])
+    assert not np.array_equal(np.asarray(states.pop[0]),
+                              np.asarray(states.pop[1]))
