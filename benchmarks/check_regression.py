@@ -1,0 +1,91 @@
+"""CI bench-regression gate for the fitness-path speedups.
+
+Compares a freshly measured ``BENCH_fitness.json`` against the committed
+baseline and fails (exit 1) when any gated speedup regressed by more than
+``--max-regression`` (default 20%). The gated keys are ratios of two
+timings taken in the same process on the same machine, so they are robust
+to absolute CI-runner speed — only a real perf rot in the fused paths
+(dispatcher/scan/dedup/vmap batching) moves them.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline BENCH_baseline.json --fresh BENCH_fitness.json
+
+The CI workflow snapshots the committed BENCH_fitness.json to
+BENCH_baseline.json *before* running ``benchmarks.run --quick`` (which
+overwrites BENCH_fitness.json in place), then runs this gate.
+
+Gated keys missing from the *baseline* are reported but pass (a new bench
+row can land in the same PR that introduces it); keys missing from the
+*fresh* results fail (the bench silently stopped measuring them).
+
+Baseline hygiene: when refreshing the committed BENCH_fitness.json, record
+a *conservative* (low) observed value for the gated ratio keys — e.g. the
+minimum over a few runs — rather than a lucky high sample; the ratios can
+swing ~20% run-to-run on a loaded machine, and the gate's tolerance should
+catch rot, not noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_SPEEDUPS = (
+    "trainer_dedup_on_speedup_vs_seed",
+    "batched_seeds_speedup_vs_sequential",
+    "swept_configs_speedup_vs_sequential",
+)
+
+
+def check(baseline: dict, fresh: dict, max_regression: float):
+    """Returns (failures, report_lines) for the gated speedup keys."""
+    failures, lines = [], []
+    for key in GATED_SPEEDUPS:
+        if key not in fresh:
+            failures.append(f"{key}: missing from fresh results")
+            lines.append(f"FAIL {key}: not measured by this run")
+            continue
+        new = float(fresh[key])
+        if key not in baseline:
+            lines.append(f"PASS {key}: {new:.2f}x (no committed baseline yet)")
+            continue
+        old = float(baseline[key])
+        floor = old * (1.0 - max_regression)
+        status = "PASS" if new >= floor else "FAIL"
+        lines.append(f"{status} {key}: {new:.2f}x vs baseline {old:.2f}x "
+                     f"(floor {floor:.2f}x at -{max_regression:.0%})")
+        if new < floor:
+            failures.append(f"{key}: {new:.2f}x < {floor:.2f}x")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed bench results (snapshot taken pre-run)")
+    ap.add_argument("--fresh", default="BENCH_fitness.json",
+                    help="results written by this run of benchmarks.run")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="maximum allowed fractional speedup drop (0.20=20%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures, lines = check(baseline, fresh, args.max_regression)
+    print("# bench-regression gate "
+          f"(baseline={args.baseline}, fresh={args.fresh})")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"# GATE FAILED: {len(failures)} speedup(s) regressed "
+              f">{args.max_regression:.0%}", file=sys.stderr)
+        return 1
+    print("# gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

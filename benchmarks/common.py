@@ -22,6 +22,12 @@ from repro.data import load_dataset, DATASETS
 GA_POP = 64
 GA_GENS = 60
 N_SEEDS = 3          # seeds per dataset for mean±std rows (tables I/II, fig4)
+# Base PRNG seed threaded into every sub-benchmark (float training uses
+# BENCH_SEED..BENCH_SEED+N_SEEDS-1, GA runs use BENCH_SEED.., kernel_bench
+# derives its workloads from it). ``benchmarks.run --seed N`` overrides it;
+# at a fixed value the whole `--quick` run is deterministic, so the CI
+# regression gate always measures the same chromosome streams.
+BENCH_SEED = 0
 # pendigits is the hardest topology (16→5→10, 10 classes): the paper spends
 # 26 M evaluations there (Table III); the bench gives it a bigger slice.
 GA_OVERRIDES = {"pendigits": dict(pop=128, gens=200)}
@@ -40,8 +46,8 @@ def dataset(name: str):
     return load_dataset(name)
 
 
-def float_baseline(name: str, seed: int = 0):
-    return _float_baseline(name, int(seed))
+def float_baseline(name: str, seed: int | None = None):
+    return _float_baseline(name, int(BENCH_SEED if seed is None else seed))
 
 
 @functools.lru_cache(maxsize=None)
@@ -54,8 +60,8 @@ def _float_baseline(name: str, seed: int):
     return fm, time.time() - t0
 
 
-def bespoke_baseline(name: str, seed: int = 0):
-    return _bespoke_baseline(name, int(seed))
+def bespoke_baseline(name: str, seed: int | None = None):
+    return _bespoke_baseline(name, int(BENCH_SEED if seed is None else seed))
 
 
 @functools.lru_cache(maxsize=None)
@@ -69,12 +75,15 @@ def _bespoke_baseline(name: str, seed: int):
 def bespoke_baseline_stats(name: str, n_seeds: int | None = None):
     """(mean, std, accs) of the exact-baseline accuracy over independent
     float-training seeds (Table I mean±std)."""
-    return _bespoke_baseline_stats(name, n_seeds or N_SEEDS)
+    # BENCH_SEED resolves *before* the cache boundary so a later reseed
+    # cannot hit a stale entry
+    return _bespoke_baseline_stats(name, n_seeds or N_SEEDS, int(BENCH_SEED))
 
 
 @functools.lru_cache(maxsize=None)
-def _bespoke_baseline_stats(name: str, n_seeds: int):
-    accs = [bespoke_baseline(name, seed).accuracy for seed in range(n_seeds)]
+def _bespoke_baseline_stats(name: str, n_seeds: int, seed0: int):
+    accs = [bespoke_baseline(name, seed0 + i).accuracy
+            for i in range(n_seeds)]
     return float(np.mean(accs)), float(np.std(accs)), accs
 
 
@@ -91,10 +100,10 @@ def _ga_setup(name: str):
 
 
 def ga_run(name: str, pop: int | None = None, gens: int | None = None,
-           seed: int = 0):
+           seed: int | None = None):
     """Returns (trainer, state, wall_s, evaluations)."""
     pop, gens = _resolve(name, pop, gens)
-    return _ga_run(name, pop, gens, seed)
+    return _ga_run(name, pop, gens, int(BENCH_SEED if seed is None else seed))
 
 
 @functools.lru_cache(maxsize=None)
@@ -114,18 +123,19 @@ def ga_run_multi(name: str, n_seeds: int | None = None,
 
     Returns (problem, per-seed GAStates, per-seed fronts, wall_s)."""
     pop, gens = _resolve(name, pop, gens)
-    return _ga_run_multi(name, n_seeds or N_SEEDS, pop, gens)
+    return _ga_run_multi(name, n_seeds or N_SEEDS, pop, gens,
+                         int(BENCH_SEED))
 
 
 @functools.lru_cache(maxsize=None)
-def _ga_run_multi(name: str, n_seeds: int, pop: int, gens: int):
+def _ga_run_multi(name: str, n_seeds: int, pop: int, gens: int, seed0: int):
     ds, topo, bb, seeds = _ga_setup(name)
     problem = engine.Problem.from_data(
         topo, ds.x_train, ds.y_train,
         GAConfig(pop_size=pop, generations=gens),
         baseline_acc=bb.accuracy)
     t0 = time.time()
-    states, _, _ = engine.run_batch(problem, np.arange(n_seeds),
+    states, _, _ = engine.run_batch(problem, seed0 + np.arange(n_seeds),
                                     doping_seeds=seeds)
     import jax
     jax.block_until_ready(states.pop)

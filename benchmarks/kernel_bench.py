@@ -22,6 +22,16 @@ have a perf trajectory:
                                of repeated-run statistics) vs ONE
                                ``engine.run_batch`` dispatch that vmaps the
                                whole scanned run over the seed axis.
+  * ``fitness_swept_configs``— a (seed × hyperparameter) grid: sequential
+                               ``GATrainer`` runs (every config is a fresh
+                               static → a fresh compile) vs ONE
+                               ``sweep.run_grid`` dispatch batching the
+                               config axis through traced Problem leaves;
+                               per-cell fronts are asserted bit-identical.
+
+Every workload is seeded from ``common.BENCH_SEED`` (the ``--seed`` flag of
+``benchmarks.run``), so two runs at the same seed score identical chromosome
+streams and the CI regression gate compares like with like.
 """
 from __future__ import annotations
 
@@ -34,13 +44,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GAConfig, GATrainer
-from repro.core import engine
+from repro.core import engine, sweep
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.mlp import population_accuracy
 from repro.core.quantize import quantize_inputs, pow2_quantize
 from repro.kernels.pop_mlp import population_correct
 from repro.data import load_dataset
 
+from . import common
 from .common import emit_row
 
 _POP = 256
@@ -52,7 +63,7 @@ def _cardio_workload():
     ds = load_dataset("cardio")
     topo = MLPTopology(ds.topology)
     spec = GenomeSpec(topo)
-    pop = spec.random(jax.random.PRNGKey(0), _POP)
+    pop = spec.random(jax.random.PRNGKey(common.BENCH_SEED), _POP)
     xi = quantize_inputs(jnp.asarray(ds.x_train), 4)
     labels = jnp.asarray(ds.y_train)
     return ds, topo, spec, pop, xi, labels
@@ -102,7 +113,7 @@ def bench_fitness_dispatch(results):
 def bench_fitness_trainer(results, dedup: bool, gens: int = 20):
     """Scanned GATrainer end to end — the shipped fitness hot loop."""
     ds, topo, _, _, xi, labels = _cardio_workload()
-    cfg = GAConfig(pop_size=_POP, generations=gens, seed=0,
+    cfg = GAConfig(pop_size=_POP, generations=gens, seed=common.BENCH_SEED,
                    fitness_backend="ref", dedup=dedup, scan=True)
     tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
     dt = _time(lambda: tr.run(), iters=3)
@@ -133,12 +144,13 @@ def bench_fitness_batched(results, n_seeds: int = 8, pop: int = 64,
                         fitness_backend="ref", scan=True)
 
     t0 = time.time()
-    for s in range(n_seeds):
+    for s in range(common.BENCH_SEED, common.BENCH_SEED + n_seeds):
         GATrainer(topo, ds.x_train, ds.y_train, cfg(s)).run()
     seq_s = time.time() - t0
 
-    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg(0))
-    seeds = np.arange(n_seeds)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train,
+                                       cfg(common.BENCH_SEED))
+    seeds = common.BENCH_SEED + np.arange(n_seeds)
     t0 = time.time()
     states, _, _ = engine.run_batch(problem, seeds)
     jax.block_until_ready(states.pop)
@@ -163,8 +175,65 @@ def bench_fitness_batched(results, n_seeds: int = 8, pop: int = 64,
              f"|speedup_vs_sequential={speedup:.2f}x")
 
 
+def bench_fitness_swept(results, n_seeds: int = 2, pop: int = 64,
+                        gens: int = 20,
+                        mutation_rates=(0.02, 0.05)):
+    """(seed × config) grid throughput: sequential trainers vs run_grid.
+
+    Every config is a fresh ``GAConfig`` static for the sequential side —
+    a fresh compile per cell, the real cost of a hyperparameter sweep
+    before the config axis became traced Problem leaves. ``run_grid``
+    compiles ONE batched program for all cells. Per-cell Pareto fronts are
+    asserted bit-identical between the two sides (run_grid's contract)."""
+    ds, topo, _, _, xi, labels = _cardio_workload()
+
+    def cfg(seed, pm):
+        return GAConfig(pop_size=pop, generations=gens, seed=seed,
+                        mutation_rate_gene=pm, fitness_backend="ref",
+                        scan=True)
+
+    seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
+    t0 = time.time()
+    seq_fronts = []
+    for s in seeds:
+        for pm in mutation_rates:
+            tr = GATrainer(topo, ds.x_train, ds.y_train, cfg(s, pm))
+            state, _ = tr.run()
+            seq_fronts.append(tr.front(state))
+    seq_s = time.time() - t0
+
+    problem = engine.Problem.from_data(
+        topo, ds.x_train, ds.y_train, cfg(seeds[0], mutation_rates[0]))
+    t0 = time.time()
+    result = sweep.run_grid(problem, seeds, mutation_rates=mutation_rates)
+    jax.block_until_ready(result.states.pop)
+    swept_s = time.time() - t0
+    fronts = result.fronts()
+
+    for f_seq, f_grid in zip(seq_fronts, fronts):
+        assert np.array_equal(f_seq["objectives"], f_grid["objectives"]), \
+            "sweep front diverged from sequential trainer front"
+
+    n_cells = result.n_cells
+    evals = n_cells * gens * pop * xi.shape[0]
+    speedup = seq_s / swept_s
+    results["fitness_swept_configs"] = {
+        "sequential_s": seq_s, "swept_s": swept_s,
+        "chromo_evals_per_s": evals / swept_s,
+        "n_cells": n_cells, "n_seeds": n_seeds,
+        "mutation_rates": list(mutation_rates),
+        "pop": pop, "generations": gens, "samples": int(xi.shape[0]),
+        "fronts_bit_identical": True, "backend": "ref+scan+vmap-grid"}
+    results["swept_configs_speedup_vs_sequential"] = speedup
+    emit_row("kernel/fitness_swept_configs", swept_s / n_cells * 1e6,
+             f"chromo_evals_per_s={evals / swept_s:.0f}|cells={n_cells}"
+             f"|pop={pop}|gens={gens}|seq_s={seq_s:.1f}|swept_s={swept_s:.1f}"
+             f"|speedup_vs_sequential={speedup:.2f}x")
+
+
 def bench_pow2_packing():
-    w = jax.random.normal(jax.random.PRNGKey(1), (4096, 4096))
+    w = jax.random.normal(jax.random.PRNGKey(common.BENCH_SEED + 1),
+                          (4096, 4096))
     t0 = time.time()
     packed = jax.jit(pow2_quantize)(w).block_until_ready()
     dt = time.time() - t0
@@ -181,6 +250,7 @@ def run():
     bench_fitness_trainer(results, dedup=False)
     bench_fitness_trainer(results, dedup=True)
     bench_fitness_batched(results)
+    bench_fitness_swept(results)
     base = results["fitness_eval"]["chromo_evals_per_s"]
     speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
     results["dispatch_speedup_vs_seed"] = speedup
@@ -192,7 +262,9 @@ def run():
           f"scanned trainer w/ dedup: "
           f"{results['trainer_dedup_on_speedup_vs_seed']:.2f}x, "
           f"8-seed batched vs sequential: "
-          f"{results['batched_seeds_speedup_vs_sequential']:.2f}x "
+          f"{results['batched_seeds_speedup_vs_sequential']:.2f}x, "
+          f"4-cell config grid vs sequential: "
+          f"{results['swept_configs_speedup_vs_sequential']:.2f}x "
           f"(→ {_RESULTS_PATH})")
     bench_pow2_packing()
     return results

@@ -1,17 +1,31 @@
 """Benchmark harness: one function per paper table/figure + roofline +
 kernel micro-benches. Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--seed N]
+
+``--seed`` (default 0) is the base PRNG seed threaded into every
+sub-benchmark via ``common.BENCH_SEED``: float-MLP training, GA runs,
+batched/swept sweeps and the kernel workloads all derive their seeds from
+it, so a ``--quick`` run is fully deterministic at a fixed seed and the CI
+regression gate (``benchmarks.check_regression``) compares like with like.
 """
+import argparse
 import json
-import sys
 import time
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-scale runs (fewer generations/seeds)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base PRNG seed for every sub-benchmark (default 0)")
+    args = ap.parse_args()
+    quick = args.quick
     t0 = time.time()
     from . import common
+    if args.seed is not None:
+        common.BENCH_SEED = args.seed
     if quick:
         common.GA_GENS = 15
         common.N_SEEDS = 2      # smoke-scale statistics; full runs use 3

@@ -17,6 +17,7 @@ from repro.core import GAConfig, GATrainer
 from repro.core.genome import MLPTopology
 from repro.data import DATASETS
 
+from . import common
 from .common import (dataset, float_baseline, ga_run_multi, emit_row,
                      GA_POP, GA_GENS)
 
@@ -33,7 +34,7 @@ def run():
         # conventional GA: accuracy objective only, no hardware awareness
         tr_acc = GATrainer(topo, ds.x_train, ds.y_train,
                            GAConfig(pop_size=GA_POP, generations=GA_GENS,
-                                    acc_only=True))
+                                    acc_only=True, seed=common.BENCH_SEED))
         t0 = time.time()
         tr_acc.run()
         ga_acc_s = time.time() - t0

@@ -6,7 +6,9 @@ float MLP → exact bespoke baseline → NSGA-II hardware-aware training →
 area/accuracy Pareto front → Verilog for the chosen design, then the same
 search repeated over 3 seeds in ONE `engine.run_batch` dispatch (the paper
 reports statistics over repeated GA runs — this is how to get them without
-N sequential retrains).
+N sequential retrains). To sweep GA *hyperparameters* (mutation/crossover
+rates, the accuracy-loss bound) the same one-dispatch way, see
+`sweep.run_grid` in examples/hyperparam_sweep.py.
 """
 import sys
 

@@ -6,6 +6,7 @@ LM-scale architectures.
 from .genome import MLPTopology, GenomeSpec
 from .engine import GAConfig, GAState, Problem
 from .trainer import GATrainer
+from .sweep import SweepResult, run_grid, grid_cells
 from .area import (mlp_fa_count, population_area, baseline_mlp_fa,
                    HardwareCost, EGFET_FA_AREA_CM2, EGFET_FA_POWER_MW)
 from .mlp import mlp_forward, mlp_predict, accuracy, population_accuracy

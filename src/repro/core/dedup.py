@@ -48,7 +48,7 @@ def _broadcast(cond, leaf):
     return cond.reshape(cond.shape + (1,) * (leaf.ndim - 1))
 
 
-def dedup_eval(eval_fn, rows: jnp.ndarray, known=None):
+def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None):
     """Evaluate ``rows`` with duplicate suppression; returns per-row values.
 
     eval_fn(batch, n_valid) → pytree of arrays with leading axis len(batch);
@@ -60,10 +60,19 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None):
         values already computed for ``rows[:K]``. Any row (at any position)
         identical to one of the first K reuses that value instead of being
         evaluated.
+    axis_name: name of an enclosing ``vmap``/``shard_map`` axis batching
+        independent dedup problems. ``n_valid`` is then the ``lax.pmax``
+        of the per-problem counts over that axis — an *unbatched* scalar,
+        so the tile-skip ``lax.cond`` inside tiled backends stays a real
+        cond instead of degrading to a both-branches select (vmap's
+        batching rule for ``cond`` with a batched predicate). Rows between
+        a problem's own count and the shared max are evaluated but never
+        gathered, so results are bit-identical with or without it.
 
     Returns ``(values, n_eval)``: values is a pytree matching ``eval_fn``'s
     output with leading axis N, in the original row order; n_eval is the
-    number of rows actually evaluated (int32 scalar).
+    number of rows this problem actually needed (int32 scalar — the
+    per-problem count even when ``axis_name`` shares the evaluation bound).
     """
     N = rows.shape[0]
     h1, h2 = hash_rows(rows)
@@ -87,7 +96,8 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None):
 
     pack = jnp.argsort(~needs)             # stable: rows needing eval first
     n_eval = jnp.sum(needs.astype(jnp.int32))
-    evaluated = eval_fn(sp[pack], n_eval)
+    n_valid = n_eval if axis_name is None else jax.lax.pmax(n_eval, axis_name)
+    evaluated = eval_fn(sp[pack], n_valid)
 
     slot = jnp.cumsum(needs.astype(jnp.int32)) - 1
     grp_slot = jax.ops.segment_max(jnp.where(needs, slot, -1), uid,

@@ -17,7 +17,10 @@ Layers on top of these:
   * :func:`run_batch`    — ``jax.vmap`` of (init → scanned run) over a
     leading seed axis: an N-seed sweep on one dataset is ONE dispatch with
     batched PRNG keys, batched doping and per-run dedup, instead of N
-    sequential ``GATrainer.run`` calls (and N recompilations).
+    sequential ``GATrainer.run`` calls (and N recompilations). The swept
+    GA hyperparameters (crossover/mutation rates, the accuracy-loss
+    bound) are traced ``Problem`` leaves, so ``repro.core.sweep.run_grid``
+    extends the same mechanism to a full (seed × config) grid.
 
 Everything stays bit-identical to the pre-engine trainer/island loops:
 integer correct-counts are the only cached quantity (dedup), the float
@@ -62,6 +65,11 @@ class GAConfig:
     sample_tile: int = 256           # sample tile ("ref" backend)
     dedup: bool = True               # duplicate-chromosome eval caching
     scan: bool = True                # lax.scan over generations (one dispatch)
+    # internal: name of the enclosing vmap/shard_map axis batching whole
+    # runs. Set by run_batch/sweep.run_grid so the dedup tile-skip stays a
+    # real lax.cond under vmap (shared n_valid via lax.pmax); never set it
+    # on a problem that runs outside that axis.
+    batch_axis: str | None = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -92,24 +100,55 @@ class GAState:
 class Problem:
     """One (dataset, topology, config) GA problem as a pytree.
 
-    Array leaves (``x_int``, ``labels``, ``baseline_acc``) trace through
-    jit/vmap/shard_map; ``spec``/``cfg`` ride in the aux data as statics.
-    ``baseline_acc`` is a float32 scalar so a future config axis can batch
-    over it — subtracting it from a float32 accuracy is bit-identical to
-    the weakly-typed Python-float subtraction the stateful trainer used.
+    Array leaves trace through jit/vmap/shard_map; ``spec``/``cfg`` ride in
+    the aux data as statics. Besides the data (``x_int``, ``labels``,
+    ``baseline_acc``), the *swept* GA hyperparameters — crossover rate,
+    per-gene mutation rate and the accuracy-loss constraint bound — are
+    float32 scalar leaves (filled from ``cfg`` when not given), so a config
+    axis can batch whole runs over them: ``sweep.run_grid`` vmaps one
+    dispatch over a (seed × hyperparameter) grid. Scalar-leaf arithmetic is
+    bit-identical to the weakly-typed Python-float arithmetic the statics
+    produced (``float32 ∘ float`` promotes to the same float32 ops).
     """
     x_int: jnp.ndarray          # (S, n_in) int32 quantized inputs
     labels: jnp.ndarray         # (S,) int32
     baseline_acc: jnp.ndarray   # () float32
     spec: GenomeSpec
     cfg: GAConfig
+    crossover_rate: jnp.ndarray = None       # () float32
+    mutation_rate_gene: jnp.ndarray = None   # () float32
+    max_acc_loss: jnp.ndarray = None         # () float32
+
+    def __post_init__(self):
+        if self.crossover_rate is None:
+            self.crossover_rate = jnp.float32(self.cfg.crossover_rate)
+        if self.mutation_rate_gene is None:
+            self.mutation_rate_gene = jnp.float32(self.cfg.mutation_rate_gene)
+        if self.max_acc_loss is None:
+            self.max_acc_loss = jnp.float32(self.cfg.max_acc_loss)
 
     def tree_flatten(self):
-        return (self.x_int, self.labels, self.baseline_acc), (self.spec, self.cfg)
+        return ((self.x_int, self.labels, self.baseline_acc,
+                 self.crossover_rate, self.mutation_rate_gene,
+                 self.max_acc_loss), (self.spec, self.cfg))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(*children[:3], *aux, *children[3:])
+
+    def with_hypers(self, crossover_rate=None, mutation_rate_gene=None,
+                    max_acc_loss=None) -> "Problem":
+        """Replace the swept hyperparameter leaves (None keeps the current
+        value); traced replacements are how a sweep builds its cells."""
+        kw = {k: v for k, v in [("crossover_rate", crossover_rate),
+                                ("mutation_rate_gene", mutation_rate_gene),
+                                ("max_acc_loss", max_acc_loss)]
+              if v is not None}
+        return dataclasses.replace(self, **kw)
+
+    def replace_cfg(self, **kw) -> "Problem":
+        """New Problem with ``cfg`` fields replaced (statics only)."""
+        return dataclasses.replace(self, cfg=dataclasses.replace(self.cfg, **kw))
 
     @classmethod
     def from_data(cls, topo: MLPTopology, x01, labels, cfg: GAConfig = GAConfig(),
@@ -157,7 +196,8 @@ def objectives(problem: Problem, pop, acc):
     else:
         area = population_area(problem.spec, pop).astype(jnp.float32)
     obj = jnp.stack([1.0 - acc, area], axis=-1)
-    viol = jnp.maximum(0.0, (problem.baseline_acc - acc) - cfg.max_acc_loss)
+    viol = jnp.maximum(0.0,
+                       (problem.baseline_acc - acc) - problem.max_acc_loss)
     return obj, viol
 
 
@@ -202,7 +242,7 @@ def initial_counts(problem: Problem, pop):
     population; doping replicates seeds, so dedup scores them once."""
     if use_dedup(problem.cfg):
         return dedup_eval(lambda rows, n: population_counts(problem, rows, n),
-                          pop)
+                          pop, axis_name=problem.cfg.batch_axis)
     return population_counts(problem, pop), jnp.int32(pop.shape[0])
 
 
@@ -210,9 +250,10 @@ def init_state(problem: Problem, key, doping_seeds=None,
                pop_size: int | None = None):
     """Pure init: root PRNG key → (GAState, n_evaluated_rows).
 
-    Traceable end to end (``run_batch`` vmaps it); called eagerly it
-    reproduces the stateful trainer's init bit-for-bit — the counts are
-    integers (fusion-proof) and the float objective chain is elementwise.
+    Traceable end to end — ``GATrainer`` jits it with the problem as an
+    argument and ``run_batch``/``sweep.run_grid`` vmap it, all bit-for-bit
+    equal: the counts are integers (fusion-proof) and the float objective
+    chain is elementwise.
     """
     cfg = problem.cfg
     key, k_pop = jax.random.split(key)
@@ -244,15 +285,15 @@ def generation(problem: Problem, state: GAState):
     P = state.pop.shape[0]
     key, k_off = jax.random.split(state.key)
     children = make_offspring(k_off, state.pop, state.rank, state.crowd,
-                              problem.spec, cfg.crossover_rate,
-                              cfg.mutation_rate_gene)
+                              problem.spec, problem.crossover_rate,
+                              problem.mutation_rate_gene)
     pop = jnp.concatenate([state.pop, children], axis=0)
     if use_dedup(cfg):
         # count only children that duplicate neither a parent nor each
         # other; everything else reuses cached integer counts
         counts, n_eval = dedup_eval(
             lambda rows, n: population_counts(problem, rows, n),
-            pop, known=state.counts)
+            pop, known=state.counts, axis_name=cfg.batch_axis)
         c_obj, c_viol = objectives(problem, children,
                                    counts_accuracy(problem, counts[P:]))
     else:
@@ -284,13 +325,26 @@ def run_scanned(problem: Problem, state: GAState, generations: int):
 
 # -- whole-run batching over seeds ------------------------------------------
 
+BATCH_AXIS = "ga_runs"   # the vmap axis name whole-run batching runs under
+
+
+def batch_problem(problem: Problem) -> Problem:
+    """Problem tagged with the whole-run batch axis: inside a
+    ``vmap(..., axis_name=BATCH_AXIS)`` its dedup shares the evaluation
+    bound via ``lax.pmax`` so the tile-skip stays a real ``lax.cond``
+    (see ``dedup_eval``). Do not run a tagged problem outside that axis."""
+    if problem.cfg.batch_axis == BATCH_AXIS:
+        return problem
+    return problem.replace_cfg(batch_axis=BATCH_AXIS)
+
+
 def _run_batch(problem: Problem, seeds, doping, generations: int):
     def one(seed):
         state, n0 = init_state(problem, jax.random.PRNGKey(seed), doping)
         state, aux = run_scanned(problem, state, generations)
         return state, aux, n0
 
-    return jax.vmap(one)(seeds)
+    return jax.vmap(one, axis_name=BATCH_AXIS)(seeds)
 
 
 _run_batch_jit = jax.jit(_run_batch, static_argnames="generations")
@@ -305,16 +359,19 @@ def run_batch(problem: Problem, seeds, generations: int | None = None,
     gains a leading (N,) axis; use ``state_at``/``front_of`` to peel runs.
 
     Results are bit-identical to a Python loop of per-seed
-    ``init_state`` + ``run_scanned`` calls, dedup on or off: counts are
-    integers, the tile-skip ``lax.cond`` becomes a select under vmap
-    (both branches run, the chosen values are unchanged), and the
-    ranking gemv/while_loop are integer-exact under batching. One caveat:
-    a reference loop must pass ``problem`` as a jit *argument* (as this
-    function does) — closing over it turns ``baseline_acc`` into a
-    compile-time constant, and XLA's constant folding then rounds the
-    violation chain differently by an ulp.
+    ``init_state`` + ``run_scanned`` calls — and to per-seed
+    ``GATrainer.run`` calls, which route through the same traced
+    functions — dedup on or off: counts are integers, the ranking
+    gemv/while_loop are integer-exact under batching, and every adapter
+    passes ``problem`` as a jit *argument* (closing over it would turn
+    ``baseline_acc`` into a compile-time constant and shift the violation
+    chain by an ulp). Under the batch the dedup tile-skip stays a real
+    ``lax.cond``: the runs share one ``lax.pmax`` evaluation bound
+    (``BATCH_AXIS``), so tiles past the widest run's unique-row count are
+    genuinely skipped instead of degrading to a both-branches select.
     """
     gens = problem.cfg.generations if generations is None else generations
+    problem = batch_problem(problem)
     seeds = jnp.asarray(seeds, jnp.int32)
     doping = _doping_array(doping_seeds)
     fn = _run_batch_jit if jit else _run_batch

@@ -70,10 +70,13 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
                       jnp.float32(baseline_acc), spec, cfg.ga)
     n_axis = int(np.prod([mesh.shape[a] for a in axis_names]))
 
-    def island_round(pop, obj, viol, counts, rank, crowd, key):
+    def island_round(problem, pop, obj, viol, counts, rank, crowd, key):
         """Local shard view: pop (island_pop, genes), obj (island_pop, 2),
         viol/counts/rank/crowd (island_pop,), key (1, 2) uint32 (the
-        leading shard axis stays — strip it for jax.random)."""
+        leading shard axis stays — strip it for jax.random). ``problem``
+        is replicated (every island sees the full dataset) and traced —
+        a closure constant would constant-fold ``baseline_acc`` and shift
+        the violation chain by an ulp vs GATrainer/run_batch."""
         key = key[0]
         state = GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
         state, _ = engine.run_scanned(problem, state, cfg.migrate_every)
@@ -108,30 +111,35 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
         return pop, obj, viol, counts, rank, crowd, key[None]
 
     pspec = P(axis_names)
-    sharded_round = shard_map(
+    sharded_round = jax.jit(shard_map(
         island_round, mesh=mesh,
-        in_specs=(pspec,) * 7,
+        in_specs=(P(),) + (pspec,) * 7,   # problem replicated, state sharded
         out_specs=(pspec,) * 7,
         check_rep=False,
-    )
+    ))
+
+    # island i == GATrainer(seed + i)'s initial state, all islands in one
+    # vmapped dispatch (512 islands ≠ 512 sequential inits). The problem is
+    # a jit argument for the same ulp reason as island_round; batched
+    # elementwise ops then round exactly like a per-island loop.
+    init_batched = jax.jit(lambda problem, seed, dope: jax.vmap(
+        lambda s: engine.init_state(problem, jax.random.PRNGKey(s),
+                                    dope, cfg.island_pop)[0]
+    )(seed + jnp.arange(n_axis)))
 
     def init(seed: int, doping_seeds=None):
-        # island i == GATrainer(seed + i)'s initial state, all islands in
-        # one vmapped dispatch (512 islands ≠ 512 sequential inits). Eager
-        # on purpose: batched elementwise ops round exactly like a
-        # per-island loop, whereas jit would constant-fold the float
-        # objective chain differently by an ulp (see engine.run_batch)
-        states = jax.vmap(
-            lambda s: engine.init_state(problem, jax.random.PRNGKey(s),
-                                        doping_seeds, cfg.island_pop)[0]
-        )(seed + jnp.arange(n_axis))
+        states = init_batched(problem, seed,
+                              engine._doping_array(doping_seeds))
         P_glob = n_axis * cfg.island_pop
         return (states.pop.reshape(P_glob, -1), states.obj.reshape(P_glob, 2),
                 states.viol.reshape(P_glob), states.counts.reshape(P_glob),
                 states.rank.reshape(P_glob), states.crowd.reshape(P_glob),
                 states.key)
 
-    return init, jax.jit(sharded_round)
+    def round_fn(*carry):
+        return sharded_round(problem, *carry)
+
+    return init, round_fn
 
 
 def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,

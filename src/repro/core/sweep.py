@@ -1,0 +1,212 @@
+"""Config-axis GA sweeps: ONE dispatch over a (seed × hyperparameter) grid.
+
+The paper's genetic training outcome is sensitive to the GA hyperparameters
+(mutation/crossover rates, the accuracy-loss constraint bound), and the
+approximation design space is explored by sweeping exactly these knobs.
+Those knobs are traced float32 leaves of :class:`~repro.core.engine.Problem`
+(``Problem.with_hypers``), so a whole sweep batches the same way a seed
+sweep does: :func:`run_grid` vmaps (init → scanned run) over every
+(seed, crossover_rate, mutation_rate_gene, max_acc_loss) cell of the
+cartesian grid — one compilation, one dispatch — and returns per-cell
+Pareto fronts. With a device ``Mesh`` it shards the cell axis via
+``shard_map`` (data replicated, cells split), bit-identical to the
+single-device path.
+
+Every cell is bit-identical to the equivalent sequential ``GATrainer.run``
+with the same hyperparameters in its ``GAConfig`` (tests/test_sweep.py):
+all adapters trace the problem through the same engine functions. Dedup
+stays a real tile-skip under the batch — the cells share one ``lax.pmax``
+evaluation bound per generation (see ``dedup_eval``), so the per-cell
+``unique_row_evals`` accounting matches the sequential runs exactly.
+
+Typical use (see ``examples/hyperparam_sweep.py``)::
+
+    problem = Problem.from_data(topo, x, y, GAConfig(...), baseline_acc=...)
+    result = sweep.run_grid(problem, seeds=range(4),
+                            mutation_rates=[0.01, 0.02, 0.05],
+                            crossover_rates=[0.5, 0.7, 0.9])
+    for i in range(result.n_cells):
+        print(result.cell(i), result.front_at(i)["objectives"])
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import engine
+from .engine import GAState, Problem
+
+
+def grid_cells(seeds, crossover_rates=None, mutation_rates=None,
+               max_acc_losses=None, cfg=None, problem=None):
+    """Cartesian (seed × config) grid as flat per-cell arrays.
+
+    ``None`` axes collapse to a single default value: the ``problem``'s
+    hyperparameter *leaves* when given (the values a batched run of that
+    problem would use — ``run_grid`` passes this), else the ``cfg``
+    statics. Returns a dict with int32 ``seed`` and float32
+    ``crossover_rate``/``mutation_rate_gene``/``max_acc_loss`` arrays of
+    shape (n_cells,), plus the grid ``shape`` tuple
+    (n_seeds, n_crossover, n_mutation, n_max_loss) — cells are laid out in
+    C order over that shape."""
+    if problem is not None:
+        pc0, pm0, mal0 = (float(problem.crossover_rate),
+                          float(problem.mutation_rate_gene),
+                          float(problem.max_acc_loss))
+    else:
+        cfg = cfg if cfg is not None else engine.GAConfig()
+        pc0, pm0, mal0 = (cfg.crossover_rate, cfg.mutation_rate_gene,
+                          cfg.max_acc_loss)
+    axes = [np.asarray(list(seeds), np.int32),
+            np.asarray([pc0] if crossover_rates is None
+                       else list(crossover_rates), np.float32),
+            np.asarray([pm0] if mutation_rates is None
+                       else list(mutation_rates), np.float32),
+            np.asarray([mal0] if max_acc_losses is None
+                       else list(max_acc_losses), np.float32)]
+    shape = tuple(len(a) for a in axes)
+    grids = np.meshgrid(*axes, indexing="ij")
+    return {"seed": grids[0].reshape(-1),
+            "crossover_rate": grids[1].reshape(-1),
+            "mutation_rate_gene": grids[2].reshape(-1),
+            "max_acc_loss": grids[3].reshape(-1),
+            "shape": shape}
+
+
+def _run_cells(problem: Problem, seeds, pcs, pms, mals, doping,
+               generations: int):
+    """vmap (init → scanned run) over the flat cell axis; the swept
+    hyperparameters become per-cell Problem leaves inside the vmap."""
+    def one(seed, pc, pm, mal):
+        p = problem.with_hypers(crossover_rate=pc, mutation_rate_gene=pm,
+                                max_acc_loss=mal)
+        state, n0 = engine.init_state(p, jax.random.PRNGKey(seed), doping)
+        state, aux = engine.run_scanned(p, state, generations)
+        return state, aux, n0
+
+    return jax.vmap(one, axis_name=engine.BATCH_AXIS)(seeds, pcs, pms, mals)
+
+
+_run_cells_jit = jax.jit(_run_cells, static_argnames="generations")
+
+
+def _run_cells_sharded(problem: Problem, seeds, pcs, pms, mals, doping,
+                       generations: int, mesh: Mesh,
+                       axis_names: tuple[str, ...]):
+    """shard_map the cell axis over ``mesh``: each device vmaps its slice
+    of cells with the data replicated. Cells are padded (by repeating the
+    last cell) to a multiple of the device count and the pads dropped —
+    per-cell results are independent, so this is bit-identical to the
+    unsharded path."""
+    n = seeds.shape[0]
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    pad = (-n) % n_dev
+    if pad:
+        def padded(a):
+            return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+        seeds, pcs, pms, mals = map(padded, (seeds, pcs, pms, mals))
+
+    pspec = P(axis_names)
+    fn = jax.jit(shard_map(
+        lambda p, s, a, b, c, d: _run_cells(p, s, a, b, c, d, generations),
+        mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, P()),
+        out_specs=pspec,
+        check_rep=False,
+    ))
+    out = fn(problem, seeds, pcs, pms, mals, doping)
+    if pad:
+        out = jax.tree_util.tree_map(lambda x: x[:n], out)
+    return out
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Batched result of a (seed × config) sweep.
+
+    ``states`` is a GAState whose every leaf has a leading (n_cells,)
+    axis; ``aux`` is (best_err, best_area, n_eval), each (n_cells, gens);
+    ``init_evals`` is the per-cell unique-row count of the initial scoring.
+    Cells are C-ordered over ``shape`` = (n_seeds, n_crossover,
+    n_mutation, n_max_loss) and described by the flat ``cells`` arrays."""
+    problem: Problem
+    cells: dict
+    states: GAState
+    aux: tuple
+    init_evals: jnp.ndarray
+
+    @property
+    def shape(self) -> tuple:
+        return self.cells["shape"]
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.cells["seed"].shape[0])
+
+    def cell(self, i: int) -> dict:
+        """Hyperparameters of flat cell ``i``."""
+        return {"seed": int(self.cells["seed"][i]),
+                "crossover_rate": float(self.cells["crossover_rate"][i]),
+                "mutation_rate_gene": float(self.cells["mutation_rate_gene"][i]),
+                "max_acc_loss": float(self.cells["max_acc_loss"][i])}
+
+    def state_at(self, i: int) -> GAState:
+        return engine.state_at(self.states, i)
+
+    def front_at(self, i: int):
+        """Feasible estimated Pareto front of cell ``i``."""
+        return engine.front_of(self.state_at(i))
+
+    def fronts(self):
+        return [self.front_at(i) for i in range(self.n_cells)]
+
+    def unique_evals(self, i: int) -> int:
+        """Unique chromosome rows actually evaluated by cell ``i`` (init +
+        every generation) — comparable to ``GATrainer.unique_evals``."""
+        return int(self.init_evals[i]) + int(np.asarray(self.aux[2][i]).sum())
+
+
+def run_grid(problem: Problem, seeds, *, crossover_rates=None,
+             mutation_rates=None, max_acc_losses=None,
+             generations: int | None = None, doping_seeds=None,
+             mesh: Mesh | None = None,
+             axis_names: tuple[str, ...] = ("data",),
+             jit: bool = True) -> SweepResult:
+    """Run the full (seed × config) grid in ONE dispatch.
+
+    seeds: iterable of integer PRNG seeds (one independent run per cell).
+    crossover_rates / mutation_rates / max_acc_losses: swept values for the
+        corresponding ``GAConfig`` knob; ``None`` keeps the problem's
+        single configured value for that axis.
+    generations: overrides ``problem.cfg.generations``.
+    doping_seeds: the same doping genomes for every cell (paper §IV-A).
+    mesh / axis_names: when given, the flat cell axis is sharded over the
+        mesh axes via ``shard_map`` (one slice of cells per device, data
+        replicated) — bit-identical to the single-device vmap.
+
+    Every cell is bit-identical to a sequential ``GATrainer.run`` whose
+    ``GAConfig`` carries that cell's hyperparameters and seed.
+    """
+    # unswept axes keep the problem's (possibly with_hypers-replaced)
+    # leaf values, matching what run_batch would run — not the cfg statics
+    cells = grid_cells(seeds, crossover_rates, mutation_rates,
+                       max_acc_losses, problem=problem)
+    gens = problem.cfg.generations if generations is None else generations
+    problem = engine.batch_problem(problem)
+    doping = engine._doping_array(doping_seeds)
+    args = (jnp.asarray(cells["seed"]),
+            jnp.asarray(cells["crossover_rate"]),
+            jnp.asarray(cells["mutation_rate_gene"]),
+            jnp.asarray(cells["max_acc_loss"]))
+    if mesh is not None:
+        states, aux, n0 = _run_cells_sharded(problem, *args, doping, gens,
+                                             mesh, axis_names)
+    else:
+        fn = _run_cells_jit if jit else _run_cells
+        states, aux, n0 = fn(problem, *args, doping, gens)
+    return SweepResult(problem, cells, states, aux, n0)

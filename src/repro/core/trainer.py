@@ -8,8 +8,13 @@ non-approximate chromosomes from a float MLP.
 ``GATrainer`` is a thin stateful adapter over the pure functional engine in
 ``repro.core.engine``: the NSGA-II generation step, the scanned whole-run
 loop and the init all live there (and are shared, bit-for-bit, with the
-island trainer in ``repro.core.islands`` and the multi-seed batched runner
-``engine.run_batch``). The fitness hot loop (the paper's ~26 M chromosome
+island trainer in ``repro.core.islands``, the multi-seed batched runner
+``engine.run_batch`` and the (seed × config) grid runner
+``repro.core.sweep``). Every jitted entry point takes the ``Problem`` as a
+traced *argument* — never a closure constant — so a trainer run is
+bit-identical to its cell in a batched/swept dispatch (closing over the
+problem would constant-fold ``baseline_acc`` into the violation chain and
+shift it by an ulp). The fitness hot loop (the paper's ~26 M chromosome
 evaluations) runs through the ``repro.kernels.pop_mlp.population_correct``
 dispatcher — Pallas kernel on TPU, sample/population-tiled jnp elsewhere —
 selected by ``GAConfig.fitness_backend``. Generations execute as a single
@@ -26,13 +31,10 @@ from typing import Optional, Sequence
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from .genome import MLPTopology
-from .nsga2 import evaluate_ranking
 from . import engine
 from .engine import GAConfig, GAState, Problem   # noqa: F401  (re-exported API)
-
 
 class GATrainer:
     """Hardware-aware NSGA-II trainer for one (topology, dataset) pair."""
@@ -50,33 +52,24 @@ class GATrainer:
         self.x_int = self.problem.x_int
         self.labels = self.problem.labels
         self.doping_seeds = doping_seeds
-        self._step = jax.jit(lambda s: engine.generation(self.problem, s)[0])
-        # jit only the *integer* counts for init: the float objective chain
-        # stays eager, exactly as the seed trainer computed it (jitting it
-        # perturbs ulps via fusion); jit-vs-eager integer counts are
-        # identical, so this is a pure init-latency optimization over
-        # running engine.init_state eagerly
-        self._init_counts = jax.jit(
-            lambda pop: engine.initial_counts(self.problem, pop))
-        self._scan_cache: dict[int, object] = {}
+        # Per-instance jits (compile caches die with the trainer — a long
+        # sweep loop of fresh trainers can't grow a process-global cache).
+        # The Problem is a traced ARGUMENT of each, never a closure
+        # constant, so the numerics match engine.run_batch /
+        # sweep.run_grid cells exactly (see module docstring).
+        self._init_jit = jax.jit(lambda problem, doping: engine.init_state(
+            problem, jax.random.PRNGKey(problem.cfg.seed), doping))
+        self._step_jit = jax.jit(
+            lambda problem, state: engine.generation(problem, state)[0])
+        self._scan_jit = jax.jit(engine.run_scanned,
+                                 static_argnames="generations")
 
     # -- init ---------------------------------------------------------------
     def init_state(self) -> GAState:
-        cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
-        key, k_pop = jax.random.split(key)
-        pop = engine.initial_population(self.problem, k_pop, self.doping_seeds)
-        if cfg.fitness_backend == "jnp":
-            counts = jnp.zeros((pop.shape[0],), jnp.int32)
-            self._init_unique_evals = pop.shape[0]
-            obj, viol = engine.fitness(self.problem, pop)
-        else:
-            counts, n_eval = self._init_counts(pop)
-            self._init_unique_evals = int(n_eval)
-            obj, viol = engine.objectives(
-                self.problem, pop, engine.counts_accuracy(self.problem, counts))
-        rank, crowd = evaluate_ranking(obj, viol)
-        return GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
+        state, n_eval = self._init_jit(
+            self.problem, engine._doping_array(self.doping_seeds))
+        self._init_unique_evals = int(n_eval)
+        return state
 
     # -- public API ----------------------------------------------------------
     def run(self, generations: int | None = None, verbose: bool = False,
@@ -97,12 +90,8 @@ class GATrainer:
         history = []
         t0 = time.time()
         if scan and gens > 0:
-            runner = self._scan_cache.get(gens)
-            if runner is None:
-                runner = jax.jit(
-                    lambda s: engine.run_scanned(self.problem, s, gens))
-                self._scan_cache[gens] = runner
-            state, (best_err, best_area, n_eval) = runner(state)
+            state, (best_err, best_area, n_eval) = self._scan_jit(
+                self.problem, state, generations=gens)
             jax.block_until_ready(state.pop)
             elapsed = time.time() - t0
             self.unique_evals = (int(np.asarray(n_eval).sum())
@@ -120,7 +109,7 @@ class GATrainer:
         else:
             self.unique_evals = None
             for g in range(gens):
-                state = self._step(state)
+                state = self._step_jit(self.problem, state)
                 if verbose and (g % self.cfg.log_every == 0 or g == gens - 1):
                     err = np.asarray(state.obj[:, 0])
                     area = np.asarray(state.obj[:, 1])

@@ -1,0 +1,162 @@
+"""Config-axis sweeps: `sweep.run_grid` batches a (seed × hyperparameter)
+grid in one vmapped dispatch and must be bit-identical to a Python double
+loop of sequential ``GATrainer.run`` calls — including the dedup accounting
+(the vmap-aware tile-skip shares one pmax bound but evaluates exactly the
+same unique rows per cell)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import GAConfig, GATrainer
+from repro.core import engine, sweep
+from repro.core.genome import MLPTopology
+
+
+STATE_FIELDS = ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen")
+
+SEEDS = (0, 1)
+MUTATION_RATES = (0.02, 0.05)
+
+
+def assert_states_equal(a, b, msg=""):
+    for name in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{msg}: GAState.{name} differs")
+
+
+@pytest.fixture(scope="module")
+def bc_setup(bc_dataset):
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+
+    def make_cfg(**kw):
+        return GAConfig(pop_size=16, generations=4, **kw)
+
+    return ds, topo, make_cfg
+
+
+def _trainer_cells(ds, topo, cfg, baseline_acc=1.0):
+    """The sequential reference: a Python double loop over GATrainer.run,
+    one fresh trainer per (seed, mutation_rate) cell, grid order."""
+    out = []
+    for s in SEEDS:
+        for pm in MUTATION_RATES:
+            c = dataclasses.replace(cfg, seed=s, mutation_rate_gene=pm)
+            tr = GATrainer(topo, ds.x_train, ds.y_train, c,
+                           baseline_acc=baseline_acc)
+            state, _ = tr.run()
+            out.append((tr, state))
+    return out
+
+
+@pytest.mark.parametrize("dedup", [True, False])
+def test_grid_matches_trainer_double_loop(bc_setup, dedup):
+    """Acceptance: every (seed × config) cell of the one-dispatch grid is
+    bit-for-bit the sequential trainer run with that cell's GAConfig."""
+    ds, topo, make_cfg = bc_setup
+    cfg = make_cfg(dedup=dedup)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    result = sweep.run_grid(problem, SEEDS, mutation_rates=MUTATION_RATES)
+    assert result.shape == (len(SEEDS), 1, len(MUTATION_RATES), 1)
+    assert result.n_cells == len(SEEDS) * len(MUTATION_RATES)
+
+    for i, (tr, state) in enumerate(_trainer_cells(ds, topo, cfg)):
+        cell = result.cell(i)
+        assert_states_equal(result.state_at(i), state,
+                            msg=f"dedup={dedup} cell {cell}")
+        f_tr, f_grid = tr.front(state), result.front_at(i)
+        np.testing.assert_array_equal(f_tr["objectives"],
+                                      f_grid["objectives"])
+        np.testing.assert_array_equal(f_tr["genomes"], f_grid["genomes"])
+
+
+def test_grid_dedup_skip_counts_match_sequential(bc_setup):
+    """The vmap-aware dedup (shared pmax bound, real lax.cond) must account
+    exactly the unique rows each cell's sequential run evaluates."""
+    ds, topo, make_cfg = bc_setup
+    cfg = make_cfg(dedup=True)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    result = sweep.run_grid(problem, SEEDS, mutation_rates=MUTATION_RATES)
+
+    for i, (tr, _) in enumerate(_trainer_cells(ds, topo, cfg)):
+        assert tr.unique_evals is not None
+        assert result.unique_evals(i) == tr.unique_evals, \
+            f"cell {result.cell(i)}: unique_row_evals diverged"
+        # dedup saves real work: never more than the nominal row count
+        nominal = (cfg.generations + 1) * cfg.pop_size
+        assert result.unique_evals(i) <= nominal
+
+
+def test_grid_constraint_axis_sweeps_feasibility(bc_setup, bc_float):
+    """max_acc_loss is a swept leaf: a loose bound must admit at least as
+    many feasible rows as a tight one on the same seed, and each cell must
+    equal the sequential trainer with that bound in its config."""
+    ds, topo, make_cfg = bc_setup
+    cfg = make_cfg()
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg,
+                                       baseline_acc=bc_float.train_acc)
+    bounds = (0.02, 0.5)
+    result = sweep.run_grid(problem, [0], max_acc_losses=bounds)
+    assert result.shape == (1, 1, 1, 2)
+
+    n_feas = []
+    for i, mal in enumerate(bounds):
+        c = dataclasses.replace(cfg, seed=0, max_acc_loss=mal)
+        tr = GATrainer(topo, ds.x_train, ds.y_train, c,
+                       baseline_acc=bc_float.train_acc)
+        state, _ = tr.run()
+        assert_states_equal(result.state_at(i), state,
+                            msg=f"max_acc_loss={mal}")
+        n_feas.append(int((np.asarray(result.state_at(i).viol) <= 0).sum()))
+    assert n_feas[1] >= n_feas[0]
+
+
+def test_grid_sharded_matches_vmap(bc_setup):
+    """A mesh-sharded grid (cells split over devices, data replicated) is
+    bit-identical to the single-device vmap, including the cell padding."""
+    ds, topo, make_cfg = bc_setup
+    cfg = make_cfg()
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    mesh = jax.make_mesh((1,), ("data",))
+    kw = dict(seeds=[0, 2, 5], mutation_rates=[0.02])
+    r_vmap = sweep.run_grid(problem, **kw)
+    r_mesh = sweep.run_grid(problem, mesh=mesh, **kw)
+    for name in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_vmap.states, name)),
+            np.asarray(getattr(r_mesh.states, name)),
+            err_msg=f"sharded GAState.{name} differs")
+    np.testing.assert_array_equal(np.asarray(r_vmap.init_evals),
+                                  np.asarray(r_mesh.init_evals))
+
+
+def test_grid_honors_with_hypers_on_unswept_axes(bc_setup):
+    """An unswept axis keeps the problem's (possibly with_hypers-replaced)
+    leaf value — not the cfg static it was constructed from."""
+    ds, topo, _ = bc_setup
+    cfg = GAConfig(pop_size=8, generations=1)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    tight = problem.with_hypers(max_acc_loss=0.05)
+    result = sweep.run_grid(tight, [0], mutation_rates=MUTATION_RATES)
+    assert (result.cells["max_acc_loss"] == np.float32(0.05)).all()
+    # and the cells actually ran at the replaced bound: equal to a batch
+    # run of the replaced problem, not of the original
+    states, _, _ = engine.run_batch(tight, [0], generations=1)
+    assert_states_equal(result.state_at(0), engine.state_at(states, 0),
+                        msg="with_hypers bound ignored by run_grid")
+
+
+def test_grid_cells_layout():
+    """grid_cells is the C-ordered cartesian product with cfg defaults on
+    unswept axes."""
+    cfg = GAConfig()
+    cells = sweep.grid_cells([3, 4], mutation_rates=[0.1, 0.2, 0.3], cfg=cfg)
+    assert cells["shape"] == (2, 1, 3, 1)
+    np.testing.assert_array_equal(cells["seed"], [3, 3, 3, 4, 4, 4])
+    np.testing.assert_allclose(cells["mutation_rate_gene"],
+                               [0.1, 0.2, 0.3] * 2, rtol=1e-6)
+    assert (cells["crossover_rate"] == np.float32(cfg.crossover_rate)).all()
+    assert (cells["max_acc_loss"] == np.float32(cfg.max_acc_loss)).all()
