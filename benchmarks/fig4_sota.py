@@ -8,8 +8,8 @@ import time
 
 from repro.core import post_training_approx
 from repro.core.genome import MLPTopology, GenomeSpec
-from repro.data import DATASETS
 
+from . import common
 from .common import (dataset, float_baseline, bespoke_baseline,
                      table_ii_points, emit_row, mean_std, N_SEEDS)
 
@@ -19,7 +19,7 @@ def run():
           f"mean±std over {N_SEEDS} seeds "
           "(name,us_per_call,ours_norm|pt_norm|pt_acc|ours_acc)")
     rows = {}
-    for name in DATASETS:
+    for name in common.DATASETS_ACTIVE:
         t0 = time.time()
         ds = dataset(name)
         topo = MLPTopology(ds.topology)

@@ -7,8 +7,8 @@ from __future__ import annotations
 import time
 
 from repro.core.area import HardwareCost, EGFET_POWER_SCALE_06V
-from repro.data import DATASETS
 
+from . import common
 from .common import bespoke_baseline, table_ii_point, emit_row
 
 SOURCES = [("harvester", 1.0), ("BlueSpark5mW", 5.0), ("Zinergy15mW", 15.0),
@@ -26,7 +26,7 @@ def run():
     print("# Fig. 5 analog — power-source feasibility "
           "(name,us_per_call,base_1V|ours_1V|ours_0.6V)")
     rows = {}
-    for name in DATASETS:
+    for name in common.DATASETS_ACTIVE:
         t0 = time.time()
         bb = bespoke_baseline(name)
         base = HardwareCost.from_fa(bb.fa_count)

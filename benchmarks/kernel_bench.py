@@ -28,6 +28,13 @@ have a perf trajectory:
                                ``sweep.run_grid`` dispatch batching the
                                config axis through traced Problem leaves;
                                per-cell fronts are asserted bit-identical.
+  * ``fitness_suite``        — the paper's full 5-dataset experiment grid:
+                               sequential per-(dataset, seed) ``GATrainer``
+                               runs (5 different topologies → a fresh
+                               compile each) vs ONE padded
+                               ``sweep.run_suite`` dispatch; per-cell
+                               fronts are asserted bit-identical to the
+                               unpadded sequential runs.
 
 Every workload is seeded from ``common.BENCH_SEED`` (the ``--seed`` flag of
 ``benchmarks.run``), so two runs at the same seed score identical chromosome
@@ -231,6 +238,74 @@ def bench_fitness_swept(results, n_seeds: int = 2, pop: int = 64,
              f"|speedup_vs_sequential={speedup:.2f}x")
 
 
+def bench_fitness_suite(results, n_seeds: int = 2, pop: int = 64,
+                        gens: int = 12):
+    """5-dataset suite throughput: sequential per-dataset trainers vs ONE
+    padded run_suite dispatch.
+
+    The sequential side is the tables' pre-suite reality: every (dataset,
+    seed) pair builds a fresh ``GATrainer`` over a *different topology*, so
+    each pays its own compile on top of its run. ``run_suite`` embeds all
+    five topologies in one max-shape layout and compiles/dispatches ONCE
+    for the whole (dataset × seed) grid — the padded lanes cost extra
+    arithmetic, which is the price being measured against. Per-cell fronts
+    are asserted bit-identical to the sequential runs (run_suite's
+    contract)."""
+    from repro.data import DATASETS
+
+    names = list(DATASETS)
+
+    def cfg(seed):
+        return GAConfig(pop_size=pop, generations=gens, seed=seed,
+                        fitness_backend="ref", scan=True)
+
+    seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
+    seq_fronts, problems = [], []
+    n_samples = 0
+    t0 = time.time()
+    for name in names:
+        ds = load_dataset(name)
+        topo = MLPTopology(ds.topology)
+        n_samples += n_seeds * int(ds.x_train.shape[0])
+        for s in seeds:
+            tr = GATrainer(topo, ds.x_train, ds.y_train, cfg(s))
+            state, _ = tr.run()
+            seq_fronts.append(tr.front(state))
+    seq_s = time.time() - t0
+
+    for name in names:
+        ds = load_dataset(name)
+        problems.append(engine.Problem.from_data(
+            MLPTopology(ds.topology), ds.x_train, ds.y_train, cfg(seeds[0])))
+    t0 = time.time()
+    result = sweep.run_suite(problems, seeds, names=names)
+    jax.block_until_ready(result.states.pop)
+    suite_s = time.time() - t0
+    fronts = [result.front_at(i) for i in range(result.n_cells)]
+
+    for f_seq, f_suite in zip(seq_fronts, fronts):
+        assert np.array_equal(f_seq["objectives"], f_suite["objectives"]), \
+            "suite front diverged from sequential trainer front"
+        assert np.array_equal(f_seq["genomes"], f_suite["genomes"]), \
+            "suite genomes diverged from sequential trainer genomes"
+
+    n_cells = result.n_cells
+    evals = gens * pop * n_samples          # nominal unpadded workload
+    speedup = seq_s / suite_s
+    results["fitness_suite"] = {
+        "sequential_s": seq_s, "suite_s": suite_s,
+        "chromo_evals_per_s": evals / suite_s,
+        "n_datasets": len(names), "n_seeds": n_seeds, "n_cells": n_cells,
+        "pop": pop, "generations": gens,
+        "padded_topology": list(result.spec.topo.sizes),
+        "fronts_bit_identical": True, "backend": "ref+scan+vmap-suite"}
+    results["suite_speedup_vs_sequential"] = speedup
+    emit_row("kernel/fitness_suite", suite_s / n_cells * 1e6,
+             f"chromo_evals_per_s={evals / suite_s:.0f}|datasets={len(names)}"
+             f"|cells={n_cells}|pop={pop}|gens={gens}|seq_s={seq_s:.1f}"
+             f"|suite_s={suite_s:.1f}|speedup_vs_sequential={speedup:.2f}x")
+
+
 def bench_pow2_packing():
     w = jax.random.normal(jax.random.PRNGKey(common.BENCH_SEED + 1),
                           (4096, 4096))
@@ -251,6 +326,7 @@ def run():
     bench_fitness_trainer(results, dedup=True)
     bench_fitness_batched(results)
     bench_fitness_swept(results)
+    bench_fitness_suite(results)
     base = results["fitness_eval"]["chromo_evals_per_s"]
     speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
     results["dispatch_speedup_vs_seed"] = speedup
@@ -264,7 +340,9 @@ def run():
           f"8-seed batched vs sequential: "
           f"{results['batched_seeds_speedup_vs_sequential']:.2f}x, "
           f"4-cell config grid vs sequential: "
-          f"{results['swept_configs_speedup_vs_sequential']:.2f}x "
+          f"{results['swept_configs_speedup_vs_sequential']:.2f}x, "
+          f"5-dataset suite vs sequential: "
+          f"{results['suite_speedup_vs_sequential']:.2f}x "
           f"(→ {_RESULTS_PATH})")
     bench_pow2_packing()
     return results

@@ -20,12 +20,23 @@ def main() -> None:
                     help="smoke-scale runs (fewer generations/seeds)")
     ap.add_argument("--seed", type=int, default=None,
                     help="base PRNG seed for every sub-benchmark (default 0)")
+    ap.add_argument("--datasets", default=None,
+                    help="comma-separated subset of the experiment datasets "
+                         "(default: all of repro.data.DATASETS)")
     args = ap.parse_args()
     quick = args.quick
     t0 = time.time()
     from . import common
     if args.seed is not None:
         common.BENCH_SEED = args.seed
+    if args.datasets is not None:
+        from repro.data import DATASETS
+        sel = tuple(s.strip() for s in args.datasets.split(",") if s.strip())
+        unknown = sorted(set(sel) - set(DATASETS))
+        if unknown or not sel:
+            ap.error(f"--datasets: unknown {unknown or 'empty selection'}; "
+                     f"choose from {', '.join(DATASETS)}")
+        common.DATASETS_ACTIVE = sel
     if quick:
         common.GA_GENS = 15
         common.N_SEEDS = 2      # smoke-scale statistics; full runs use 3

@@ -10,8 +10,7 @@ import time
 
 from repro.core.genome import MLPTopology
 from repro.core.area import HardwareCost
-from repro.data import DATASETS
-
+from . import common
 from .common import dataset, bespoke_baseline, bespoke_baseline_stats, emit_row
 
 # paper Table I reference values (for side-by-side reporting)
@@ -28,7 +27,7 @@ def run():
     print("# Table I analog — exact bespoke baseline "
           "(name,us_per_call,acc_mean±std|area_cm2|power_mw|paper_acc|paper_area)")
     rows = {}
-    for name in DATASETS:
+    for name in common.DATASETS_ACTIVE:
         t0 = time.time()
         ds = dataset(name)
         bb = bespoke_baseline(name)

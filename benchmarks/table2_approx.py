@@ -6,9 +6,9 @@ from __future__ import annotations
 
 import time
 
-from repro.data import DATASETS
 from repro.core.area import HardwareCost
 
+from . import common
 from .common import (bespoke_baseline, table_ii_points, emit_row, mean_std,
                      N_SEEDS)
 
@@ -22,7 +22,7 @@ def run():
     print("# Table II analog — ours at <=5% loss, mean±std over "
           f"{N_SEEDS} seeds (name,us_per_call,acc|area_red|power_red|paper)")
     rows = {}
-    for name in DATASETS:
+    for name in common.DATASETS_ACTIVE:
         t0 = time.time()
         bb = bespoke_baseline(name)
         points_all = table_ii_points(name)

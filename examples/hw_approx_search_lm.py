@@ -5,7 +5,6 @@ formats (bf16 / int8 / pow2) trading eval loss vs weight bytes.
 """
 import argparse
 
-import numpy as np
 import jax
 
 from repro.configs import get_config

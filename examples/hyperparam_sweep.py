@@ -13,7 +13,6 @@ cell — then reports each cell's best design within 5% accuracy loss
 """
 import sys
 
-import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (GAConfig, calibrated_seeds, exact_bespoke_baseline,

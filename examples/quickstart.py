@@ -8,7 +8,9 @@ search repeated over 3 seeds in ONE `engine.run_batch` dispatch (the paper
 reports statistics over repeated GA runs — this is how to get them without
 N sequential retrains). To sweep GA *hyperparameters* (mutation/crossover
 rates, the accuracy-loss bound) the same one-dispatch way, see
-`sweep.run_grid` in examples/hyperparam_sweep.py.
+`sweep.run_grid` in examples/hyperparam_sweep.py — and to run ALL FIVE
+paper datasets/topologies as one padded dispatch (the whole experiment
+table), see `sweep.run_suite` in examples/full_suite.py.
 """
 import sys
 

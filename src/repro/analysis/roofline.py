@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 # TPU v5e hardware constants (brief §ROOFLINE)
 V5E = {

@@ -28,7 +28,7 @@ import os
 import re
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 import jax

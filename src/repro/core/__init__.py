@@ -3,10 +3,10 @@ training for printed MLPs (pow2 weights, bit-mask pruning, FA-count area,
 NSGA-II), plus the generalized hardware-approximation search used by the
 LM-scale architectures.
 """
-from .genome import MLPTopology, GenomeSpec
-from .engine import GAConfig, GAState, Problem
+from .genome import MLPTopology, GenomeSpec, GeneTable, max_topology
+from .engine import GAConfig, GAState, Problem, pad_problem
 from .trainer import GATrainer
-from .sweep import SweepResult, run_grid, grid_cells
+from .sweep import SweepResult, SuiteResult, run_grid, grid_cells, run_suite
 from .area import (mlp_fa_count, population_area, baseline_mlp_fa,
                    HardwareCost, EGFET_FA_AREA_CM2, EGFET_FA_POWER_MW)
 from .mlp import mlp_forward, mlp_predict, accuracy, population_accuracy

@@ -35,6 +35,25 @@ _N_COLS = 32          # column budget: in_bits(≤8) + max shift(6) + log2 fan-i
 _REDUCE_ROUNDS = 16   # ≥ log_{3/2}(max column height); 16 covers height ≤ 2^9
 
 
+def _guard_columns(col_idx: jnp.ndarray) -> jnp.ndarray:
+    """Column-budget overflow guard: ``shift + bit`` beyond ``_N_COLS``.
+
+    The paper's gene bounds keep every column ≤ in_bits−1 + max_exp ≈ 13,
+    far inside the 32-column budget, but out-of-range exponents used to
+    fall silently out of the one-hot (the bit simply vanished from the
+    area model). Now: concrete (eager) inputs raise, traced inputs clamp
+    into the top column — conservative (the bit is still counted) and
+    branch-free inside jit."""
+    if isinstance(col_idx, jax.core.Tracer):
+        return jnp.clip(col_idx, 0, _N_COLS - 1)
+    top = int(jnp.max(col_idx))
+    if top >= _N_COLS:
+        raise ValueError(
+            f"adder column {top} exceeds the _N_COLS={_N_COLS} budget "
+            "(shift + bit position too large for the area model)")
+    return col_idx
+
+
 def _column_histogram(masks, exps, bias, bshift, in_bits: int) -> jnp.ndarray:
     """Non-zero bit count per adder column for one neuron.
 
@@ -47,7 +66,7 @@ def _column_histogram(masks, exps, bias, bshift, in_bits: int) -> jnp.ndarray:
     cols = jnp.zeros((_N_COLS,), jnp.int32)
     j = jnp.arange(in_bits)
     bits = (masks[:, None] >> j[None, :]) & 1                    # (fan_in, in_bits)
-    col_idx = j[None, :] + exps[:, None]                          # (fan_in, in_bits)
+    col_idx = _guard_columns(j[None, :] + exps[:, None])          # (fan_in, in_bits)
     onehot = jax.nn.one_hot(col_idx, _N_COLS, dtype=jnp.int32)    # (fi, ib, C)
     cols = cols + jnp.sum(bits[..., None] * onehot, axis=(0, 1))
     # bias: a hardwired constant; its |magnitude| bits occupy adder slots at

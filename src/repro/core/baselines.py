@@ -14,7 +14,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 import jax

@@ -48,7 +48,8 @@ def _broadcast(cond, leaf):
     return cond.reshape(cond.shape + (1,) * (leaf.ndim - 1))
 
 
-def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None):
+def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
+               gene_mask=None):
     """Evaluate ``rows`` with duplicate suppression; returns per-row values.
 
     eval_fn(batch, n_valid) → pytree of arrays with leading axis len(batch);
@@ -68,6 +69,12 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None):
         batching rule for ``cond`` with a batched predicate). Rows between
         a problem's own count and the shared max are evaluated but never
         gathered, so results are bit-identical with or without it.
+    gene_mask: optional (G,) validity mask of a padded-canonical layout.
+        Hashing and first-occurrence comparison then look only at valid
+        genes, so a padding column can never split a hash class. The
+        operators pin padding to zero, which makes masked and unmasked
+        grouping agree — this is defense in depth, not a semantic change —
+        and ``eval_fn`` always sees the actual (padded) rows.
 
     Returns ``(values, n_eval)``: values is a pytree matching ``eval_fn``'s
     output with leading axis N, in the original row order; n_eval is the
@@ -75,9 +82,10 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None):
     per-problem count even when ``axis_name`` shares the evaluation bound).
     """
     N = rows.shape[0]
-    h1, h2 = hash_rows(rows)
+    keyed = rows if gene_mask is None else jnp.where(gene_mask, rows, 0)
+    h1, h2 = hash_rows(keyed)
     order = jnp.lexsort((h2, h1))
-    sp = rows[order]
+    sp = keyed[order]
     first = jnp.concatenate([jnp.ones((1,), bool),
                              jnp.any(sp[1:] != sp[:-1], axis=1)])
     uid = jnp.cumsum(first.astype(jnp.int32)) - 1      # group id per sorted row
@@ -97,7 +105,7 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None):
     pack = jnp.argsort(~needs)             # stable: rows needing eval first
     n_eval = jnp.sum(needs.astype(jnp.int32))
     n_valid = n_eval if axis_name is None else jax.lax.pmax(n_eval, axis_name)
-    evaluated = eval_fn(sp[pack], n_valid)
+    evaluated = eval_fn(rows[order][pack], n_valid)   # actual, unmasked rows
 
     slot = jnp.cumsum(needs.astype(jnp.int32)) - 1
     grp_slot = jax.ops.segment_max(jnp.where(needs, slot, -1), uid,

@@ -36,9 +36,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .genome import GenomeSpec, MLPTopology
+from . import genome as genome_mod
+from .genome import GeneTable, GenomeSpec, MLPTopology, random_population
 from .quantize import quantize_inputs
-from .mlp import counts_to_accuracy, population_accuracy
+from .mlp import population_accuracy
 from .area import population_area
 from .dedup import dedup_eval
 from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
@@ -109,15 +110,28 @@ class Problem:
     dispatch over a (seed × hyperparameter) grid. Scalar-leaf arithmetic is
     bit-identical to the weakly-typed Python-float arithmetic the statics
     produced (``float32 ∘ float`` promotes to the same float32 ops).
+
+    Padded-canonical problems (suite batching): ``genes`` (the per-gene
+    GeneTable the operators read), ``out_mask`` (valid output columns for
+    the fitness argmax) and ``inv_n`` (the float32 1/n_samples factor of
+    the count→accuracy conversion) are leaves too, defaulted from the spec
+    for an ordinary problem. :func:`pad_problem` replaces them with a
+    smaller topology's embedding into a shared max-shape spec, which is how
+    ``sweep.run_suite`` batches five different datasets/topologies as lanes
+    of ONE vmapped dispatch — each lane bit-identical to its unpadded
+    sequential run (see ``genome.GeneTable``).
     """
     x_int: jnp.ndarray          # (S, n_in) int32 quantized inputs
-    labels: jnp.ndarray         # (S,) int32
+    labels: jnp.ndarray         # (S,) int32; −1 marks padded samples
     baseline_acc: jnp.ndarray   # () float32
     spec: GenomeSpec
     cfg: GAConfig
     crossover_rate: jnp.ndarray = None       # () float32
     mutation_rate_gene: jnp.ndarray = None   # () float32
     max_acc_loss: jnp.ndarray = None         # () float32
+    genes: GeneTable = None                  # per-gene operator metadata
+    out_mask: jnp.ndarray = None             # (n_out,) int32 valid columns
+    inv_n: jnp.ndarray = None                # () float32 = 1 / n_valid_samples
 
     def __post_init__(self):
         if self.crossover_rate is None:
@@ -126,11 +140,18 @@ class Problem:
             self.mutation_rate_gene = jnp.float32(self.cfg.mutation_rate_gene)
         if self.max_acc_loss is None:
             self.max_acc_loss = jnp.float32(self.cfg.max_acc_loss)
+        if self.genes is None:
+            self.genes = self.spec.table()
+        if self.out_mask is None:
+            self.out_mask = jnp.ones((self.spec.topo.sizes[-1],), jnp.int32)
+        if self.inv_n is None:
+            self.inv_n = jnp.float32(1.0 / self.labels.shape[0])
 
     def tree_flatten(self):
         return ((self.x_int, self.labels, self.baseline_acc,
                  self.crossover_rate, self.mutation_rate_gene,
-                 self.max_acc_loss), (self.spec, self.cfg))
+                 self.max_acc_loss, self.genes, self.out_mask,
+                 self.inv_n), (self.spec, self.cfg))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -167,6 +188,46 @@ def use_dedup(cfg: GAConfig) -> bool:
     return cfg.dedup and cfg.fitness_backend != "jnp"
 
 
+def pad_problem(problem: Problem, spec_pad: GenomeSpec,
+                n_samples: int | None = None) -> Problem:
+    """Embed ``problem`` into the padded max-shape layout of ``spec_pad``.
+
+    Returns a Problem that runs bit-identically to the original: genes keep
+    their draw ids and bounds at the embedded positions (padding is
+    canonical zero — ``genome.padded_table``), extra input columns are
+    zero (AND-masked activations contribute nothing), ``out_mask`` pins
+    padded output columns below any real logit, and ``inv_n`` keeps the
+    original sample count. ``n_samples`` additionally pads the sample axis
+    (features 0, label −1 — never matched by an argmax) so several
+    datasets can stack on a suite axis.
+
+    The count-based fitness backends handle all of this exactly; the "jnp"
+    oracle backend does not (it averages over the padded sample axis), so
+    padded problems must use ``ref``/``kernel``/``interpret``/``auto``.
+    """
+    if problem.cfg.fitness_backend == "jnp":
+        raise ValueError("padded problems need a count-based fitness "
+                         "backend (ref/kernel/interpret/auto), not 'jnp'")
+    inner = problem.spec
+    pos = genome_mod.pad_positions(inner, spec_pad)
+    genes = genome_mod.padded_table(inner, spec_pad, pos)
+    x, labels = problem.x_int, problem.labels
+    S = x.shape[0]
+    pad_cols = spec_pad.topo.sizes[0] - x.shape[1]
+    pad_rows = 0 if n_samples is None else n_samples - S
+    if pad_rows < 0:
+        raise ValueError(f"n_samples={n_samples} < dataset size {S}")
+    if pad_cols or pad_rows:
+        x = jnp.pad(x, ((0, pad_rows), (0, pad_cols)))
+        labels = jnp.pad(labels, (0, pad_rows), constant_values=-1)
+    out_mask = np.zeros((spec_pad.topo.sizes[-1],), np.int32)
+    out_mask[: inner.topo.sizes[-1]] = 1
+    return Problem(x, labels, problem.baseline_acc, spec_pad, problem.cfg,
+                   problem.crossover_rate, problem.mutation_rate_gene,
+                   problem.max_acc_loss, genes, jnp.asarray(out_mask),
+                   problem.inv_n)
+
+
 # -- fitness ----------------------------------------------------------------
 
 def population_counts(problem: Problem, pop, n_valid=None):
@@ -181,11 +242,18 @@ def population_counts(problem: Problem, pop, n_valid=None):
     return population_correct(
         pop, problem.x_int, problem.labels, spec=problem.spec,
         backend=cfg.fitness_backend, pop_tile=cfg.pop_tile,
-        sample_tile=cfg.sample_tile, n_valid_rows=n_valid)
+        sample_tile=cfg.sample_tile, n_valid_rows=n_valid,
+        out_mask=problem.out_mask)
 
 
 def counts_accuracy(problem: Problem, counts):
-    return counts_to_accuracy(counts, problem.labels.shape[0])
+    """int32 correct counts → float32 accuracy: THE conversion every
+    trainer shares. ``inv_n`` is a float32 leaf computed host-side as
+    1/n_valid_samples, so the product is bit-identical to the oracle's
+    ``jnp.mean`` (mean lowers to sum × reciprocal(n), and the sum of 0/1
+    float32 terms equals the count exactly for n < 2²⁴) while letting a
+    padded problem divide by its own sample count under vmap."""
+    return counts.astype(jnp.float32) * problem.inv_n
 
 
 def objectives(problem: Problem, pop, acc):
@@ -228,7 +296,7 @@ def initial_population(problem: Problem, key, doping_seeds=None,
     (n, n_genes) array; the same seeds dope every run of a batch."""
     cfg = problem.cfg
     P = cfg.pop_size if pop_size is None else pop_size
-    pop = problem.spec.random(key, P)
+    pop = random_population(key, problem.genes, P)
     dope = _doping_array(doping_seeds)
     if dope is not None:
         n_dope = max(1, int(cfg.doping_frac * P))
@@ -242,7 +310,8 @@ def initial_counts(problem: Problem, pop):
     population; doping replicates seeds, so dedup scores them once."""
     if use_dedup(problem.cfg):
         return dedup_eval(lambda rows, n: population_counts(problem, rows, n),
-                          pop, axis_name=problem.cfg.batch_axis)
+                          pop, axis_name=problem.cfg.batch_axis,
+                          gene_mask=problem.genes.valid)
     return population_counts(problem, pop), jnp.int32(pop.shape[0])
 
 
@@ -285,7 +354,7 @@ def generation(problem: Problem, state: GAState):
     P = state.pop.shape[0]
     key, k_off = jax.random.split(state.key)
     children = make_offspring(k_off, state.pop, state.rank, state.crowd,
-                              problem.spec, problem.crossover_rate,
+                              problem.genes, problem.crossover_rate,
                               problem.mutation_rate_gene)
     pop = jnp.concatenate([state.pop, children], axis=0)
     if use_dedup(cfg):
@@ -293,7 +362,8 @@ def generation(problem: Problem, state: GAState):
         # other; everything else reuses cached integer counts
         counts, n_eval = dedup_eval(
             lambda rows, n: population_counts(problem, rows, n),
-            pop, known=state.counts, axis_name=cfg.batch_axis)
+            pop, known=state.counts, axis_name=cfg.batch_axis,
+            gene_mask=problem.genes.valid)
         c_obj, c_viol = objectives(problem, children,
                                    counts_accuracy(problem, counts[P:]))
     else:

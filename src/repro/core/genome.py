@@ -19,6 +19,19 @@ Gene semantics (paper §III / Eq. (4)):
 Everything is specified by :class:`GenomeSpec`, which owns per-gene integer
 bounds ``low``/``high`` (inclusive / exclusive) so that mutation and random
 initialisation are single vectorised ``randint`` calls.
+
+Padded-canonical layouts (suite batching): any topology embeds into a
+larger "max-shape" topology by scattering its genes at the corresponding
+(weight, neuron, layer) coordinates and forcing every padding gene to a
+canonical zero (bounds ``[0, 1)``). The per-gene metadata that drives the
+operators — bounds, mask bits, draw ids, validity — lives in a
+:class:`GeneTable` pytree whose leaves trace through jit/vmap, so five
+different topologies can run as lanes of ONE vmapped program over a shared
+padded :class:`GenomeSpec`. All gene-shaped randomness is *gene-addressed*
+(:func:`gene_uniform` keys every gene's draw by ``fold_in(key, id)``, never
+by array shape), which is what makes a padded run bit-identical to the
+unpadded one: valid genes share their draw ids with the unpadded layout,
+padding draws exist but are forced to zero.
 """
 from __future__ import annotations
 
@@ -26,6 +39,7 @@ import dataclasses
 from typing import Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -57,6 +71,64 @@ class MLPTopology:
     @property
     def max_exp(self) -> int:
         return self.weight_bits - 2  # k ∈ [0, n-1)  →  {0, ..., n-2}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GeneTable:
+    """Per-gene operator metadata as traced array leaves.
+
+    The operators (init / mutation / crossover / clip) read everything they
+    need about a gene from here instead of from ``GenomeSpec`` statics, so a
+    batch axis can carry a *different* table per lane (the suite's five
+    topologies embedded in one padded layout) through one traced program.
+
+    ``ids`` addresses the PRNG: gene ``j`` draws from ``fold_in(key,
+    ids[j])``, so draws depend on (key, id, row) — never on the gene axis
+    length. A padded table reuses the unpadded layout's ids at the embedded
+    positions, which makes padded and unpadded runs consume identical
+    randomness per gene. Padding entries have bounds ``[0, 1)``,
+    ``is_mask=False`` and ``valid=False``: init and mutation can only write
+    zero there, and clip pins them to zero (the canonical-zero rule).
+    """
+
+    low: jnp.ndarray        # (G,) int32 inclusive lower bound
+    high: jnp.ndarray       # (G,) int32 exclusive upper bound
+    is_mask: jnp.ndarray    # (G,) bool — bit-flip mutation instead of reset
+    mask_bits: jnp.ndarray  # (G,) int32 — bit width of mask genes (0 else)
+    ids: jnp.ndarray        # (G,) int32 PRNG draw ids
+    valid: jnp.ndarray      # (G,) bool — False on padding
+
+    def tree_flatten(self):
+        return (self.low, self.high, self.is_mask, self.mask_bits,
+                self.ids, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def gene_uniform(key, ids: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(n, G) float32 uniforms addressed by (key, ids[j], row).
+
+    THE canonical gene-shaped draw: element (i, j) is uniform number ``i``
+    of the stream ``fold_in(key, ids[j])``, so its value is independent of
+    how many genes sit beside it. Two layouts that give a gene the same id
+    (an unpadded chromosome and its padded embedding) therefore draw the
+    same number for it — the invariant suite batching rests on.
+    """
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+    return jax.vmap(lambda k: jax.random.uniform(k, (n,)), out_axes=1)(keys)
+
+
+def random_population(key, genes: GeneTable, n: int) -> jnp.ndarray:
+    """Uniform random (n, G) int32 population within the table's bounds.
+
+    Padding bounds are [0, 1) so padded genes come out exactly zero."""
+    u = gene_uniform(key, genes.ids, n)
+    lo = genes.low.astype(jnp.float32)
+    hi = genes.high.astype(jnp.float32)
+    return jnp.floor(lo + u * (hi - lo)).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +190,14 @@ class GenomeSpec:
             mask_bits[sl.masks] = sl.in_bits
         self.is_mask = jnp.asarray(is_mask)
         self.mask_bits = jnp.asarray(mask_bits)
+        self.gene_ids = jnp.arange(off, dtype=jnp.int32)
+        self.gene_valid = jnp.ones(off, bool)
+
+    def table(self) -> GeneTable:
+        """The spec's own GeneTable (identity layout: ids are positions,
+        every gene valid)."""
+        return GeneTable(self.low, self.high, self.is_mask, self.mask_bits,
+                         self.gene_ids, self.gene_valid)
 
     # -- structured views -------------------------------------------------
     def layer_params(self, genome: jnp.ndarray, l: int):
@@ -142,12 +222,7 @@ class GenomeSpec:
 
     def random(self, key, n: int) -> jnp.ndarray:
         """Uniform random population of ``n`` chromosomes within bounds."""
-        import jax
-
-        u = jax.random.uniform(key, (n, self.n_genes))
-        lo = self.low.astype(jnp.float32)
-        hi = self.high.astype(jnp.float32)
-        return jnp.floor(lo + u * (hi - lo)).astype(jnp.int32)
+        return random_population(key, self.table(), n)
 
     def clip(self, genome: jnp.ndarray) -> jnp.ndarray:
         return jnp.clip(genome, self.low, self.high - 1)
@@ -188,3 +263,85 @@ class GenomeSpec:
             # QReLU rescale ≈ log2(scale * input_range) to undo the blow-up
             g[sl.rshift.start] = int(np.clip(np.round(np.log2(scale * 15)), 0, 7))
         return g
+
+
+# ---------------------------------------------------------------------------
+# Padded-canonical embedding (suite batching across topologies)
+# ---------------------------------------------------------------------------
+
+def max_topology(topos: Sequence[MLPTopology]) -> MLPTopology:
+    """The elementwise-max topology every ``topos`` member embeds into."""
+    first = topos[0]
+    for t in topos:
+        if t.n_layers != first.n_layers:
+            raise ValueError("suite topologies must share the layer count")
+        if (t.input_bits, t.act_bits, t.weight_bits, t.bias_bits) != (
+                first.input_bits, first.act_bits, first.weight_bits,
+                first.bias_bits):
+            raise ValueError("suite topologies must share all bit widths")
+    sizes = tuple(max(t.sizes[i] for t in topos)
+                  for i in range(len(first.sizes)))
+    return MLPTopology(sizes, first.input_bits, first.act_bits,
+                       first.weight_bits, first.bias_bits)
+
+
+def pad_positions(inner: "GenomeSpec", padded: "GenomeSpec") -> np.ndarray:
+    """(inner.n_genes,) positions of each inner gene in the padded layout.
+
+    Gene families embed coordinate-wise: weight (i, j) of layer ``l`` lands
+    at the padded layer's (i, j), bias j at bias j, the per-layer shift
+    genes on each other. Everything the padded layout adds beyond these
+    positions is padding (canonical zero)."""
+    if len(inner.layers) != len(padded.layers):
+        raise ValueError("padded spec must have the same layer count")
+    pos = np.empty(inner.n_genes, np.int64)
+    for si, sp in zip(inner.layers, padded.layers):
+        if si.fan_in > sp.fan_in or si.fan_out > sp.fan_out:
+            raise ValueError("padded layer smaller than the inner layer")
+        if si.in_bits != sp.in_bits:
+            raise ValueError("padded layer changes the input bit width")
+        t = np.arange(si.fan_in * si.fan_out)
+        woff = (t // si.fan_out) * sp.fan_out + t % si.fan_out
+        pos[si.masks] = sp.masks.start + woff
+        pos[si.signs] = sp.signs.start + woff
+        pos[si.exps] = sp.exps.start + woff
+        pos[si.biases] = sp.biases.start + np.arange(si.fan_out)
+        pos[si.bshift] = sp.bshift.start
+        pos[si.rshift] = sp.rshift.start
+    return pos
+
+
+def padded_table(inner: "GenomeSpec", padded: "GenomeSpec",
+                 pos: np.ndarray | None = None) -> GeneTable:
+    """``inner``'s GeneTable embedded in ``padded``'s flat layout.
+
+    Embedded genes keep their bounds/mask metadata and — crucially — their
+    *inner* draw ids, so a padded run consumes the same randomness per gene
+    as the unpadded one. Padding entries get bounds [0, 1), no mask
+    semantics and ``valid=False`` (draw id 0; the draw is never used)."""
+    pos = pad_positions(inner, padded) if pos is None else pos
+    G = padded.n_genes
+    low = np.zeros(G, np.int32)
+    high = np.ones(G, np.int32)
+    is_mask = np.zeros(G, bool)
+    mask_bits = np.zeros(G, np.int32)
+    ids = np.zeros(G, np.int32)
+    valid = np.zeros(G, bool)
+    low[pos] = np.asarray(inner.low)
+    high[pos] = np.asarray(inner.high)
+    is_mask[pos] = np.asarray(inner.is_mask)
+    mask_bits[pos] = np.asarray(inner.mask_bits)
+    ids[pos] = np.arange(inner.n_genes, dtype=np.int32)
+    valid[pos] = True
+    return GeneTable(jnp.asarray(low), jnp.asarray(high),
+                     jnp.asarray(is_mask), jnp.asarray(mask_bits),
+                     jnp.asarray(ids), jnp.asarray(valid))
+
+
+def pad_genomes(genomes, pos: np.ndarray, n_genes_padded: int) -> np.ndarray:
+    """Scatter (..., inner_genes) chromosomes into the padded layout with
+    canonical-zero padding (host-side; used for doping seeds and tests)."""
+    g = np.asarray(genomes, np.int32)
+    out = np.zeros(g.shape[:-1] + (n_genes_padded,), np.int32)
+    out[..., pos] = g
+    return out

@@ -20,7 +20,6 @@ production scale via the island model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 import jax

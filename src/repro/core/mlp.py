@@ -35,6 +35,19 @@ def _layer_forward(x, masks, signs, exps, bias, bshift, rshift, out_bits: int,
     return qrelu(acc, rshift, out_bits)
 
 
+def mask_logits(logits: jnp.ndarray, out_mask) -> jnp.ndarray:
+    """Pin invalid output columns to INT32_MIN before argmax.
+
+    ``out_mask``: (n_out,) — nonzero marks a valid class. Padded output
+    neurons produce all-zero logits (canonical-zero genes), which would win
+    the argmax whenever every real logit is negative; masking restores the
+    unpadded prediction exactly (real accumulators are |·| < 2^24, so the
+    sentinel can never collide). ``None`` is a no-op."""
+    if out_mask is None:
+        return logits
+    return jnp.where(out_mask > 0, logits, jnp.iinfo(jnp.int32).min)
+
+
 def mlp_forward(spec: GenomeSpec, genome: jnp.ndarray, x_int: jnp.ndarray) -> jnp.ndarray:
     """Single-chromosome forward. x_int: (batch, n_in) int32 → (batch, n_out)."""
     h = x_int
@@ -56,36 +69,32 @@ def accuracy(spec: GenomeSpec, genome: jnp.ndarray, x01, labels) -> jnp.ndarray:
     return jnp.mean((mlp_predict(spec, genome, x01) == labels).astype(jnp.float32))
 
 
-def population_accuracy(spec: GenomeSpec, pop: jnp.ndarray, x_int, labels) -> jnp.ndarray:
+def population_accuracy(spec: GenomeSpec, pop: jnp.ndarray, x_int, labels,
+                        out_mask=None) -> jnp.ndarray:
     """(P, n_genes) × (S, n_in) → (P,) accuracy. Inputs pre-quantized so the
     quantization is hoisted out of the population vmap."""
 
     def one(g):
-        pred = jnp.argmax(mlp_forward(spec, g, x_int), axis=-1)
+        pred = jnp.argmax(mask_logits(mlp_forward(spec, g, x_int), out_mask),
+                          axis=-1)
         return jnp.mean((pred == labels).astype(jnp.float32))
 
     return jax.vmap(one)(pop)
 
 
-def counts_to_accuracy(counts: jnp.ndarray, n_samples: int) -> jnp.ndarray:
-    """int32 correct counts → float32 accuracy, bit-identical to the
-    oracle's ``jnp.mean``: mean lowers to sum × reciprocal(n), not a true
-    division, and the sum of 0/1 float32 terms equals the count exactly for
-    n < 2²⁴ — so this is THE conversion both trainers must share."""
-    return counts.astype(jnp.float32) * jnp.float32(1.0 / n_samples)
-
-
 def population_correct_counts(spec: GenomeSpec, pop: jnp.ndarray, x_int,
-                              labels) -> jnp.ndarray:
+                              labels, out_mask=None) -> jnp.ndarray:
     """(P, n_genes) × (S, n_in) → (P,) int32 correct-prediction counts.
 
     Count-based twin of :func:`population_accuracy` (counts are what the
     Pallas kernel and the tiled reference accumulate across sample tiles;
     ``count / S`` reproduces the float32 mean bit-for-bit for S < 2^24).
-    Padded samples can be masked by passing a negative label."""
+    Padded samples can be masked by passing a negative label; padded output
+    columns by ``out_mask`` (see :func:`mask_logits`)."""
 
     def one(g):
-        pred = jnp.argmax(mlp_forward(spec, g, x_int), axis=-1)
+        pred = jnp.argmax(mask_logits(mlp_forward(spec, g, x_int), out_mask),
+                          axis=-1)
         return jnp.sum((pred == labels).astype(jnp.int32))
 
     return jax.vmap(one)(pop)

@@ -7,55 +7,81 @@ the bit-pruning space); all other genes mutate by bounded random reset.
 The paper reports operator rates "0.2% and 0.7%" (mutation / crossover); we
 read them as probabilities 0.2-per-chromosome-scaled and 0.7 (the standard
 NSGA-II regime) and expose both as config — see GAConfig defaults.
+
+Every operator reads its per-gene metadata from a :class:`GeneTable` (traced
+leaves, so a suite batch can carry a different table per lane) and draws all
+gene-shaped randomness through :func:`gene_uniform` — addressed by the
+table's draw ids, never by the gene-axis length. Consequences:
+
+  * a padded chromosome evolves bit-identically to its unpadded original
+    (valid genes share ids, so they see the same draws), and
+  * padding genes can never move off the canonical zero: their bounds are
+    [0, 1) (reset and init floor to 0), ``is_mask`` is False (no bit
+    flips), and the final clip pins them to [0, 0].
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .genome import GenomeSpec
+from .genome import GenomeSpec, GeneTable, gene_uniform
 from .nsga2 import tournament_select
 
 
-def uniform_crossover(key, a: jnp.ndarray, b: jnp.ndarray, pc: float):
-    """Pairwise uniform crossover. a, b: (n, genes) parent pools."""
+def _as_table(genes) -> GeneTable:
+    return genes.table() if isinstance(genes, GenomeSpec) else genes
+
+
+def uniform_crossover(key, a: jnp.ndarray, b: jnp.ndarray, pc: float,
+                      ids: jnp.ndarray):
+    """Pairwise uniform crossover. a, b: (n, genes) parent pools; ``ids``
+    addresses the per-gene swap draws (GeneTable.ids)."""
     k1, k2 = jax.random.split(key)
     do = jax.random.uniform(k1, (a.shape[0], 1)) < pc
-    take_b = jax.random.bernoulli(k2, 0.5, a.shape)
+    take_b = gene_uniform(k2, ids, a.shape[0]) < 0.5
     child1 = jnp.where(do & take_b, b, a)
     child2 = jnp.where(do & take_b, a, b)
     return child1, child2
 
 
-def mutate(key, pop: jnp.ndarray, spec: GenomeSpec, pm_gene: float) -> jnp.ndarray:
+def mutate(key, pop: jnp.ndarray, genes, pm_gene: float) -> jnp.ndarray:
     """Per-gene mutation: bit-flip for masks, random reset otherwise."""
+    t = _as_table(genes)
+    P = pop.shape[0]
     k1, k2, k3 = jax.random.split(key, 3)
-    do = jax.random.bernoulli(k1, pm_gene, pop.shape)
+    do = gene_uniform(k1, t.ids, P) < pm_gene
 
     # mask genes: flip one uniformly chosen bit of the mask
-    u = jax.random.uniform(k2, pop.shape)
-    bitpos = jnp.floor(u * jnp.maximum(spec.mask_bits, 1)).astype(jnp.int32)
+    u = gene_uniform(k2, t.ids, P)
+    bitpos = jnp.floor(u * jnp.maximum(t.mask_bits, 1)).astype(jnp.int32)
     flipped = jnp.bitwise_xor(pop, jnp.left_shift(1, bitpos))
 
     # other genes: uniform reset in [low, high)
-    u2 = jax.random.uniform(k3, pop.shape)
-    lo = spec.low.astype(jnp.float32)
-    hi = spec.high.astype(jnp.float32)
+    u2 = gene_uniform(k3, t.ids, P)
+    lo = t.low.astype(jnp.float32)
+    hi = t.high.astype(jnp.float32)
     reset = jnp.floor(lo + u2 * (hi - lo)).astype(jnp.int32)
 
-    mutated = jnp.where(spec.is_mask, flipped, reset)
+    mutated = jnp.where(t.is_mask, flipped, reset)
     return jnp.where(do, mutated, pop)
 
 
-def make_offspring(key, pop: jnp.ndarray, rank, crowd, spec: GenomeSpec,
+def clip_genes(pop: jnp.ndarray, genes) -> jnp.ndarray:
+    """Clamp to [low, high); pins padding genes to the canonical zero."""
+    t = _as_table(genes)
+    return jnp.clip(pop, t.low, t.high - 1)
+
+
+def make_offspring(key, pop: jnp.ndarray, rank, crowd, genes,
                    pc: float, pm_gene: float) -> jnp.ndarray:
     """Tournament → crossover → mutation: produces |pop| children."""
+    t = _as_table(genes)
     P = pop.shape[0]
     k_sel, k_cx, k_mut = jax.random.split(key, 3)
     parents = tournament_select(k_sel, rank, crowd, P)
     pa = pop[parents[: P // 2]]
     pb = pop[parents[P // 2:]]
-    c1, c2 = uniform_crossover(k_cx, pa, pb, pc)
+    c1, c2 = uniform_crossover(k_cx, pa, pb, pc, t.ids)
     children = jnp.concatenate([c1, c2], axis=0)
-    children = mutate(k_mut, children, spec, pm_gene)
-    return spec.clip(children)
+    children = mutate(k_mut, children, t, pm_gene)
+    return clip_genes(children, t)

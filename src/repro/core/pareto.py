@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 
 def nondominated_mask(obj: np.ndarray) -> np.ndarray:

@@ -9,7 +9,6 @@ Covers both regimes:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 # uint8 packing: bit 7 = sign (1 → negative), bits 0..6 = exponent + _EXP_BIAS.

@@ -27,6 +27,16 @@ Typical use (see ``examples/hyperparam_sweep.py``)::
                             crossover_rates=[0.5, 0.7, 0.9])
     for i in range(result.n_cells):
         print(result.cell(i), result.front_at(i)["objectives"])
+
+Suite batching (:func:`run_suite`) adds the last sequential axis: the
+*dataset*. Each per-dataset Problem (its own topology, sample count, class
+count, baseline) is embedded into one shared max-shape ``GenomeSpec`` via
+``engine.pad_problem`` — per-gene bounds/ids, the output-column mask and the
+1/n accuracy factor become traced leaves — and the (dataset × seed × config)
+cells stack on ONE vmap axis. Every cell is bit-identical to the *unpadded*
+sequential ``GATrainer.run`` on that dataset (gene-addressed PRNG draws +
+canonical-zero padding; tests/test_suite.py), so the paper's whole 5-dataset
+experiment table is one dispatch (``benchmarks/common.ga_run_suite``).
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import engine
+from . import genome as genome_mod
 from .engine import GAState, Problem
 
 
@@ -210,3 +221,215 @@ def run_grid(problem: Problem, seeds, *, crossover_rates=None,
         fn = _run_cells_jit if jit else _run_cells
         states, aux, n0 = fn(problem, *args, doping, gens)
     return SweepResult(problem, cells, states, aux, n0)
+
+
+# ---------------------------------------------------------------------------
+# Suite batching: (dataset × seed × config) as one dispatch
+# ---------------------------------------------------------------------------
+
+def suite_spec(problems) -> "engine.GenomeSpec":
+    """The shared max-shape GenomeSpec every suite problem embeds into."""
+    topo = genome_mod.max_topology([p.spec.topo for p in problems])
+    return genome_mod.GenomeSpec(topo)
+
+
+def _run_suite_cells(problem: Problem, seeds, doping, generations: int):
+    """vmap (init → scanned run) over the flat suite-cell axis. ``problem``
+    is the stacked padded Problem (every leaf has a leading cell axis);
+    ``doping`` is per-cell pre-expanded doping rows or None."""
+    def one(p, seed, dope):
+        state, n0 = engine.init_state(p, jax.random.PRNGKey(seed), dope)
+        state, aux = engine.run_scanned(p, state, generations)
+        return state, aux, n0
+
+    ax = None if doping is None else 0
+    return jax.vmap(one, in_axes=(0, 0, ax),
+                    axis_name=engine.BATCH_AXIS)(problem, seeds, doping)
+
+
+_run_suite_jit = jax.jit(_run_suite_cells, static_argnames="generations")
+
+
+def _run_suite_sharded(problem: Problem, seeds, doping, generations: int,
+                       mesh: Mesh, axis_names: tuple[str, ...]):
+    """shard_map the suite-cell axis over ``mesh`` (cells split, nothing
+    replicated — every leaf is per-cell). Cells are padded to a multiple of
+    the device count by repeating the last cell and the pads dropped;
+    per-cell results are independent, so this is bit-identical to vmap."""
+    n = seeds.shape[0]
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    pad = (-n) % n_dev
+    if pad:
+        def padded(a):
+            return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+        problem, seeds, doping = jax.tree_util.tree_map(
+            padded, (problem, seeds, doping))
+
+    pspec = P(axis_names)
+    fn = jax.jit(shard_map(
+        lambda p, s, d: _run_suite_cells(p, s, d, generations),
+        mesh=mesh, in_specs=(pspec, pspec, pspec), out_specs=pspec,
+        check_rep=False,
+    ))
+    out = fn(problem, seeds, doping)
+    if pad:
+        out = jax.tree_util.tree_map(lambda x: x[:n], out)
+    return out
+
+
+@dataclasses.dataclass
+class SuiteResult:
+    """Batched result of a (dataset × seed × config) suite run.
+
+    ``states``' leaves carry a leading (n_cells,) axis; cells are C-ordered
+    over ``shape`` = (n_datasets, n_seeds, n_crossover, n_mutation,
+    n_max_loss). ``state_at`` peels a cell and (by default) gathers its
+    population back to the dataset's *unpadded* gene layout, so fronts and
+    genomes flow into the downstream tooling (area/accuracy/Verilog)
+    exactly like a sequential ``GATrainer`` run's."""
+    problems: list              # the original (inner, unpadded) Problems
+    spec: "engine.GenomeSpec"   # the shared padded spec
+    names: list                 # per-dataset labels (strings or indices)
+    positions: list             # per-dataset inner→padded gene positions
+    cells: dict                 # flat per-cell arrays + the grid shape
+    states: GAState
+    aux: tuple                  # (best_err, best_area, n_eval), (n_cells, gens)
+    init_evals: jnp.ndarray     # (n_cells,) unique rows of the init scoring
+
+    @property
+    def shape(self) -> tuple:
+        return self.cells["shape"]
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.cells["seed"].shape[0])
+
+    def dataset_of(self, i: int) -> int:
+        return int(self.cells["dataset"][i])
+
+    def cell(self, i: int) -> dict:
+        d = self.dataset_of(i)
+        return {"dataset": self.names[d], "seed": int(self.cells["seed"][i]),
+                "crossover_rate": float(self.cells["crossover_rate"][i]),
+                "mutation_rate_gene":
+                    float(self.cells["mutation_rate_gene"][i]),
+                "max_acc_loss": float(self.cells["max_acc_loss"][i])}
+
+    def cells_of(self, name) -> list:
+        """Flat indices of every cell of dataset ``name`` (label or index),
+        in (seed × config) C order."""
+        d = name if isinstance(name, int) else list(self.names).index(name)
+        return [i for i in range(self.n_cells) if self.dataset_of(i) == d]
+
+    def state_at(self, i: int, unpad: bool = True) -> GAState:
+        state = engine.state_at(self.states, i)
+        if unpad:
+            pos = self.positions[self.dataset_of(i)]
+            state = dataclasses.replace(state, pop=state.pop[:, pos])
+        return state
+
+    def front_at(self, i: int):
+        """Feasible Pareto front of cell ``i``; genomes in the dataset's
+        unpadded layout (objectives/violations are bit-identical either
+        way — padding contributes zero area and zero logits)."""
+        return engine.front_of(self.state_at(i))
+
+    def unique_evals(self, i: int) -> int:
+        """Unique chromosome rows cell ``i`` actually evaluated — matches
+        the unpadded sequential ``GATrainer.unique_evals`` exactly."""
+        return int(self.init_evals[i]) + int(np.asarray(self.aux[2][i]).sum())
+
+
+def run_suite(problems, seeds, *, crossover_rates=None, mutation_rates=None,
+              max_acc_losses=None, generations: int | None = None,
+              doping_seeds=None, names=None,
+              spec: "engine.GenomeSpec | None" = None,
+              mesh: Mesh | None = None,
+              axis_names: tuple[str, ...] = ("data",),
+              jit: bool = True) -> SuiteResult:
+    """Run several datasets' (seed × config) grids as ONE dispatch.
+
+    problems: per-dataset Problems (different topologies/sample counts are
+        fine — they embed into one max-shape layout). All must share the
+        same ``GAConfig`` (one traced program ⇒ one population size, one
+        generation count, one backend).
+    seeds / crossover_rates / mutation_rates / max_acc_losses: as in
+        :func:`run_grid`; the cartesian grid repeats per dataset.
+    doping_seeds: optional list (aligned with ``problems``) of per-dataset
+        doping genomes in their *unpadded* layouts (paper §IV-A); each
+        dataset's seeds are host-expanded to the doped row block and
+        scattered into the padded layout, so cell inits replicate the
+        sequential trainer's doping bit-for-bit.
+    names: per-dataset labels for ``SuiteResult.cell``/``cells_of``.
+    mesh / axis_names: shard the flat cell axis via ``shard_map``
+        (bit-identical to the single-device vmap).
+
+    Every cell is bit-identical to the sequential **unpadded**
+    ``GATrainer.run`` on that dataset with the cell's seed and
+    hyperparameters — including the dedup ``unique_row_evals`` accounting
+    (the cells share one ``lax.pmax`` evaluation bound; rows between a
+    cell's own count and the shared bound are evaluated but never
+    gathered).
+    """
+    problems = list(problems)
+    if not problems:
+        raise ValueError("run_suite needs at least one problem")
+    cfg0 = problems[0].cfg
+    for p in problems[1:]:
+        if p.cfg != cfg0:
+            raise ValueError("suite problems must share one GAConfig "
+                             f"(got {p.cfg} vs {cfg0})")
+    names = list(names) if names is not None else list(range(len(problems)))
+    gens = cfg0.generations if generations is None else generations
+    spec_pad = suite_spec(problems) if spec is None else spec
+    s_max = max(int(p.x_int.shape[0]) for p in problems)
+    positions = [genome_mod.pad_positions(p.spec, spec_pad) for p in problems]
+    padded = [engine.batch_problem(engine.pad_problem(p, spec_pad, s_max))
+              for p in problems]
+
+    # flat cells: dataset-major, then the per-dataset (seed × config) grid
+    cell_problems, cell_dope, meta = [], [], []
+    n_dope = max(1, int(cfg0.doping_frac * cfg0.pop_size))
+    if doping_seeds is not None and len(doping_seeds) != len(problems):
+        raise ValueError("doping_seeds must align with problems")
+    for d, p in enumerate(padded):
+        cells_d = grid_cells(seeds, crossover_rates, mutation_rates,
+                             max_acc_losses, problem=p)
+        if doping_seeds is not None:
+            dope = np.asarray(engine._doping_array(doping_seeds[d]))
+            reps = np.resize(np.arange(dope.shape[0]), n_dope)
+            dope_rows = genome_mod.pad_genomes(dope[reps], positions[d],
+                                               spec_pad.n_genes)
+        for k in range(cells_d["seed"].shape[0]):
+            cell_problems.append(p.with_hypers(
+                jnp.float32(cells_d["crossover_rate"][k]),
+                jnp.float32(cells_d["mutation_rate_gene"][k]),
+                jnp.float32(cells_d["max_acc_loss"][k])))
+            if doping_seeds is not None:
+                cell_dope.append(dope_rows)
+            meta.append((d, cells_d["seed"][k],
+                         cells_d["crossover_rate"][k],
+                         cells_d["mutation_rate_gene"][k],
+                         cells_d["max_acc_loss"][k]))
+        grid_shape = cells_d["shape"]
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *cell_problems)
+    cells = {"dataset": np.asarray([m[0] for m in meta], np.int32),
+             "seed": np.asarray([m[1] for m in meta], np.int32),
+             "crossover_rate": np.asarray([m[2] for m in meta], np.float32),
+             "mutation_rate_gene": np.asarray([m[3] for m in meta],
+                                              np.float32),
+             "max_acc_loss": np.asarray([m[4] for m in meta], np.float32),
+             "shape": (len(problems),) + grid_shape}
+    seed_arr = jnp.asarray(cells["seed"])
+    doping = (None if doping_seeds is None
+              else jnp.asarray(np.stack(cell_dope)))
+    if mesh is not None:
+        states, aux, n0 = _run_suite_sharded(stacked, seed_arr, doping, gens,
+                                             mesh, axis_names)
+    else:
+        fn = _run_suite_jit if jit else _run_suite_cells
+        states, aux, n0 = fn(stacked, seed_arr, doping, gens)
+    return SuiteResult(problems, spec_pad, names, positions, cells, states,
+                       aux, n0)

@@ -60,8 +60,8 @@ def _forward_block(genome, x, spec: GenomeSpec):
     return h
 
 
-def _kernel(genome_ref, x_ref, y_ref, rows_ref, o_ref, *, spec: GenomeSpec,
-            n_s: int, n_valid: int, bs: int, bp: int):
+def _kernel(genome_ref, x_ref, y_ref, rows_ref, om_ref, o_ref, *,
+            spec: GenomeSpec, n_s: int, n_valid: int, bs: int, bp: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -75,6 +75,9 @@ def _kernel(genome_ref, x_ref, y_ref, rows_ref, o_ref, *, spec: GenomeSpec,
     @pl.when(row_start < rows_ref[0, 0])
     def _compute():
         logits = _forward_block(genome_ref[...], x_ref[...], spec)
+        # padded-topology output columns (om == 0) can never win the argmax
+        logits = jnp.where(om_ref[...][:, None, :] > 0, logits,
+                           jnp.iinfo(jnp.int32).min)
         pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (bp, bs)
         correct = (pred == y_ref[...][:, 0][None, :]).astype(jnp.int32)
         # mask padded samples in the tail tile
@@ -89,13 +92,16 @@ def _kernel(genome_ref, x_ref, y_ref, rows_ref, o_ref, *, spec: GenomeSpec,
 def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
                     *, spec: GenomeSpec, bp: int = 8, bs: int = 128,
                     interpret: bool = False,
-                    n_valid_rows=None) -> jnp.ndarray:
+                    n_valid_rows=None, out_mask=None) -> jnp.ndarray:
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
 
     ``n_valid_rows`` (optional, traced int32): rows at or past it live in
-    skipped population blocks — see module docstring."""
+    skipped population blocks — see module docstring. ``out_mask``
+    ((n_out,), optional, traced): valid output columns of a padded-topology
+    chromosome; omitted means every column is valid."""
     P, G = pop.shape
     S = x_int.shape[0]
+    n_out = spec.topo.sizes[-1]
     bp = min(bp, P)
     pad_p = (bp - P % bp) % bp
     if pad_p:                     # zero rows are valid genomes; counts dropped
@@ -107,6 +113,8 @@ def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
     n_s = (S + pad_s) // bs
     rows = jnp.full((1, 1), P if n_valid_rows is None else n_valid_rows,
                     jnp.int32)
+    om = (jnp.ones((1, n_out), jnp.int32) if out_mask is None
+          else jnp.asarray(out_mask, jnp.int32).reshape(1, n_out))
     out = pl.pallas_call(
         functools.partial(_kernel, spec=spec, n_s=n_s, n_valid=S, bs=bs,
                           bp=bp),
@@ -118,9 +126,10 @@ def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
             # valid-row scalar; plain (1, 1) block — SMEM memory_space breaks
             # interpret mode on this jax version
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n_out), lambda i, j: (0, 0)),  # output-col mask
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((P + pad_p, 1), jnp.int32),
         interpret=interpret,
-    )(pop, x_int, labels[:, None], rows)
+    )(pop, x_int, labels[:, None], rows, om)
     return out[:P, 0]

@@ -14,6 +14,11 @@ Backends:
 live in population tiles that are skipped outright ("ref", "kernel",
 "interpret") and have unspecified counts. The "jnp" oracle evaluates
 everything regardless.
+
+``out_mask`` ((n_out,), traced) marks the valid output columns of a
+padded-topology chromosome (suite batching): invalid columns are pinned to
+INT32_MIN before the argmax on every backend, so a padded genome predicts
+exactly like its unpadded original.
 """
 from __future__ import annotations
 
@@ -28,7 +33,7 @@ BACKENDS = ("auto", "kernel", "interpret", "ref", "jnp")
 def population_correct(pop, x_int, labels, *, spec, backend=None,
                        use_kernel=None, interpret=None,
                        pop_tile: int = 64, sample_tile: int = 256,
-                       n_valid_rows=None):
+                       n_valid_rows=None, out_mask=None):
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
 
     ``use_kernel``/``interpret`` are the legacy knobs (pre-dispatcher API)
@@ -45,12 +50,14 @@ def population_correct(pop, x_int, labels, *, spec, backend=None,
             bs=min(sample_tile, 128),
             interpret=(backend == "interpret" if interpret is None
                        else interpret),
-            n_valid_rows=n_valid_rows)
+            n_valid_rows=n_valid_rows, out_mask=out_mask)
     if backend == "ref":
         return pop_mlp_correct_tiled(pop, x_int, labels, spec=spec,
                                      pop_tile=pop_tile,
                                      sample_tile=sample_tile,
-                                     n_valid_rows=n_valid_rows)
+                                     n_valid_rows=n_valid_rows,
+                                     out_mask=out_mask)
     if backend == "jnp":
-        return pop_mlp_correct_ref(pop, x_int, labels, spec=spec)
+        return pop_mlp_correct_ref(pop, x_int, labels, spec=spec,
+                                   out_mask=out_mask)
     raise ValueError(f"unknown fitness backend {backend!r}; want {BACKENDS}")

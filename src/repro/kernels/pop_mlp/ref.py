@@ -18,14 +18,15 @@ from ...core.genome import GenomeSpec
 from ...core.mlp import population_accuracy, population_correct_counts
 
 
-def pop_mlp_correct_ref(pop, x_int, labels, *, spec: GenomeSpec):
-    acc = population_accuracy(spec, pop, x_int, labels)
+def pop_mlp_correct_ref(pop, x_int, labels, *, spec: GenomeSpec,
+                        out_mask=None):
+    acc = population_accuracy(spec, pop, x_int, labels, out_mask=out_mask)
     return jnp.round(acc * labels.shape[0]).astype(jnp.int32)
 
 
 def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
                           pop_tile: int = 64, sample_tile: int = 256,
-                          n_valid_rows=None):
+                          n_valid_rows=None, out_mask=None):
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts, tiled.
 
     The sample axis is processed in ``sample_tile`` chunks via ``lax.scan``
@@ -34,7 +35,9 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
     int32) is given, population tiles starting at or past it return zeros
     through ``lax.cond`` without running the forward pass — rows ≥
     ``n_valid_rows`` therefore have unspecified counts. Rows <
-    ``n_valid_rows`` are always bit-exact w.r.t. the oracle.
+    ``n_valid_rows`` are always bit-exact w.r.t. the oracle. ``out_mask``
+    ((n_out,), optional, traced) marks the valid output columns of a
+    padded-topology chromosome — see ``repro.core.mlp.mask_logits``.
     """
     P, G = pop.shape
     S, n_in = x_int.shape
@@ -56,7 +59,8 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
     def eval_tile(rows):
         def body(acc, xy):
             xb, yb = xy
-            return acc + population_correct_counts(spec, rows, xb, yb), None
+            return acc + population_correct_counts(spec, rows, xb, yb,
+                                                   out_mask=out_mask), None
 
         acc, _ = lax.scan(body, jnp.zeros((pt,), jnp.int32), (x_c, y_c))
         return acc

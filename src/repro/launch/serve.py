@@ -14,7 +14,6 @@ import jax
 from ..configs import get_config
 from ..models import build_model
 from ..runtime.serve_loop import ServeLoop, Request
-from .mesh import make_host_mesh
 
 
 def main():

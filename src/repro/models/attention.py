@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .params import ParamDecl
 from .common import (rmsnorm_decl, rmsnorm, dense_decl, dense, rope_angles,
                      mrope_angles, apply_rope, blockwise_attention,
                      decode_attention, update_cache, shard_act, head_spec)

@@ -6,7 +6,6 @@ tiles — the pure-XLA flash pattern; the Pallas twin lives in repro.kernels).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ArchConfig
 from .common import dense_decl, dense
 
 

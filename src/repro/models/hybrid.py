@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .common import rmsnorm, F32
+from .common import rmsnorm
 from .attention import attention, attention_decode, cache_decl
 from .ffn import ffn
 from .ssm import ssm_block, ssm_decode, ssm_cache_decl

@@ -5,14 +5,13 @@ this interface.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ArchConfig, ShapeSpec, SHAPES
+from ..configs.base import ArchConfig, ShapeSpec
 from ..sharding.rules import (param_partition_specs, batch_axes,
                               input_sharding)
 from ..optim.adamw import AdamW, apply_updates, clip_by_global_norm, opt_state_specs

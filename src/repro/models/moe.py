@@ -25,7 +25,7 @@ from jax.experimental.shard_map import shard_map
 
 from ..configs.base import ArchConfig, MoEConfig
 from .params import ParamDecl
-from .common import dense_decl, dense, F32
+from .common import dense_decl, F32
 
 
 def moe_decl(cfg: ArchConfig) -> dict:

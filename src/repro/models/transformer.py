@@ -17,14 +17,12 @@ depends on.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .params import ParamDecl, materialize, shape_tree, axes_tree, count_params
+from .params import ParamDecl
 from .common import rmsnorm_decl, rmsnorm, F32
 from .attention import attn_decl, attention, attention_decode, cache_decl
 from .mla import mla_decl, mla_attention, mla_decode, mla_cache_decl

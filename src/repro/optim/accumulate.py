@@ -7,7 +7,6 @@ is the common case for the train cells.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

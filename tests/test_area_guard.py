@@ -1,0 +1,38 @@
+"""Column-budget overflow guard of the FA-count area model (no hypothesis
+dependency — unlike tests/test_core_area.py this module must run
+everywhere, so the boundary regression tests live here)."""
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.area import neuron_fa_count, _N_COLS
+
+def _one_bit_neuron_fa(exp, jit=False):
+    """One summand, only bit 3 of the mask set, shifted by ``exp``."""
+    args = (jnp.asarray([0b1000, 0b1000, 0b1000], jnp.int32),
+            jnp.ones(3, jnp.int32),
+            jnp.asarray([exp, exp, exp], jnp.int32),
+            jnp.int32(0), jnp.int32(0))
+    fn = (lambda m, s, k, b, bs: neuron_fa_count(m, s, k, b, bs, 4))
+    return (jax.jit(fn)(*args) if jit else fn(*args))
+
+
+def test_column_budget_boundary_passes():
+    """bit 3 + exp 28 = column 31: exactly at the budget, no complaint, and
+    three bits in one column reduce to one FA."""
+    assert int(_one_bit_neuron_fa(_N_COLS - 1 - 3)) == 1
+
+
+def test_column_budget_overflow_raises_eager():
+    """bit 3 + exp 29 = column 32: eager (concrete) inputs hard-error
+    instead of silently dropping the bit from the area model."""
+    with pytest.raises(ValueError, match="_N_COLS"):
+        _one_bit_neuron_fa(_N_COLS - 3)
+
+
+def test_column_budget_overflow_clips_traced():
+    """The same overflow under jit clamps into the top column — the bit is
+    counted (conservative), equal to placing it at column 31."""
+    over = _one_bit_neuron_fa(_N_COLS - 3, jit=True)
+    at_edge = _one_bit_neuron_fa(_N_COLS - 1 - 3)
+    assert int(over) == int(at_edge) == 1

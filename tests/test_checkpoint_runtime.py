@@ -8,8 +8,9 @@ import jax.numpy as jnp
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint.manager import (save_checkpoint, restore_checkpoint,
-                                      latest_step, CheckpointManager)
+from repro.checkpoint.manager import (save_checkpoint,
+                                      restore_checkpoint,
+                                      latest_step)
 from repro.runtime.train_loop import TrainLoop, TrainLoopConfig, _InjectedFailure
 from repro.runtime.compression import Int8Compressor
 from repro.runtime.serve_loop import ServeLoop, Request

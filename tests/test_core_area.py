@@ -1,13 +1,14 @@
 """FA-count area model: against a brute-force python reduction + properties."""
-import numpy as np
 import pytest
 import jax.numpy as jnp
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.core.genome import MLPTopology, GenomeSpec
-from repro.core.area import (neuron_fa_count, mlp_fa_count, baseline_mlp_fa,
-                             _column_histogram, _reduce_columns, _N_COLS)
+from repro.core.area import (neuron_fa_count,
+                             baseline_mlp_fa,
+                             _column_histogram,
+                             _reduce_columns,
+                             _N_COLS)
 
 
 def brute_force_fa(cols):
@@ -75,3 +76,4 @@ def test_histogram_places_shifted_bits():
                              jnp.asarray([3], jnp.int32),
                              jnp.int32(0), jnp.int32(0), 4)
     assert int(cols[3]) == 1 and int(cols.sum()) == 1
+

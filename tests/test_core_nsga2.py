@@ -1,14 +1,15 @@
 """NSGA-II primitives vs an O(n²) python reference (property-based)."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.core.nsga2 import (dominance_matrix, nondominated_rank,
-                              crowding_distance, evaluate_ranking,
-                              tournament_select, survivor_select)
+from repro.core.nsga2 import (dominance_matrix,
+                              nondominated_rank,
+                              crowding_distance,
+                              tournament_select,
+                              survivor_select)
 
 
 def ref_rank(obj, viol):

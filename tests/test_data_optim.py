@@ -1,6 +1,5 @@
 """Data pipelines + optimizer stack."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -1,6 +1,5 @@
 """Multi-device semantics, run in subprocesses with 8 placeholder CPU devices
 (the in-process test session must keep its single real device)."""
-import json
 import os
 import subprocess
 import sys

@@ -1,7 +1,6 @@
 """GA-based hardware-aware training: end-to-end behaviour (paper §IV/§V)."""
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro.core import (GAConfig, GATrainer, hypervolume_2d, calibrated_seeds,
                         exact_bespoke_baseline, best_within_loss)

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.quantize import (pow2_quantize, pow2_dequantize, int8_quantize,
                                  int8_dequantize, fixed_point_quantize)
-from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.hdl import emit_verilog, evaluate_genome_python, emit_testbench
 
 

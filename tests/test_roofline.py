@@ -1,11 +1,9 @@
 """Roofline analysis: HLO collective parsing, extrapolation, conventions."""
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.roofline import (parse_collectives, _shape_bytes,
-                                     analyze_compiled, V5E,
+from repro.analysis.roofline import (parse_collectives,
+                                     _shape_bytes,
                                      extrapolate_depth as _extrapolate)
 
 

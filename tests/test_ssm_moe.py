@@ -1,5 +1,4 @@
 """Mamba2 SSD vs naive recurrence; MoE routing correctness."""
-import dataclasses
 
 import numpy as np
 import pytest
@@ -7,11 +6,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
-from repro.models.ssm import _ssd_chunked, ssm_block, ssm_decode, ssm_cache_decl
-from repro.models.moe import moe_ffn, _local_moe
+from repro.configs.base import MoEConfig
+from repro.models.ssm import _ssd_chunked, ssm_block, ssm_decode
+from repro.models.moe import _local_moe
 from repro.models.params import materialize
-from repro.models import transformer as tf
 
 
 def naive_ssd(x, dt, A, B, C):
