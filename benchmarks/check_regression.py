@@ -32,6 +32,7 @@ import sys
 
 GATED_SPEEDUPS = (
     "trainer_dedup_on_speedup_vs_seed",
+    "variation_speedup_vs_seed",
     "batched_seeds_speedup_vs_sequential",
     "swept_configs_speedup_vs_sequential",
     "suite_speedup_vs_sequential",

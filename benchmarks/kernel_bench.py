@@ -13,6 +13,17 @@ have a perf trajectory:
                                call per generation-equivalent.
   * ``fitness_dispatch``     — ``population_correct`` "ref" backend
                                (sample/population-tiled jnp).
+  * ``variation_fused``      — ``population_variation`` "ref" backend (ONE
+                               counter-based Threefry pass for all gene
+                               draws) vs the PR-4 per-gene fold_in draw
+                               structure; summary ratio
+                               ``variation_speedup_vs_seed``.
+  * ``phase_breakdown``      — ``variation_us_per_gen`` /
+                               ``fitness_us_per_gen`` /
+                               ``ranking_us_per_gen``: one generation's
+                               three traced regions timed as separate
+                               dispatches, so future PRs can see which
+                               phase dominates.
   * ``fitness_trainer_*``    — full scanned ``GATrainer.run`` (fitness +
                                NSGA-II + operators in one dispatch), dedup
                                off/on; chromo_evals_per_s counts the nominal
@@ -51,11 +62,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GAConfig, GATrainer
-from repro.core import engine, sweep
+from repro.core import engine, nsga2, sweep
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.mlp import population_accuracy
+from repro.core.operators import variation_keys
 from repro.core.quantize import quantize_inputs, pow2_quantize
 from repro.kernels.pop_mlp import population_correct
+from repro.kernels.pop_variation import population_variation
 from repro.data import load_dataset
 
 from . import common
@@ -115,6 +128,129 @@ def bench_fitness_dispatch(results):
         "pop": _POP, "samples": int(xi.shape[0]), "backend": "ref-tiled"}
     emit_row("kernel/fitness_dispatch", dt * 1e6,
              f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|backend=ref")
+
+
+def bench_variation(results):
+    """Fused variation pass vs the seed-style draw structure.
+
+    The "seed" side replicates the PR-4 variation hot path: five separate
+    gene-shaped draw passes per generation, each paying a per-gene
+    ``fold_in`` vmap (a scalar Threefry hash per gene) before its uniform
+    pass. The fused side is the shipped ``population_variation`` "ref"
+    backend: ONE counter-based Threefry pass for all draw slots + one
+    elementwise crossover/mutation/clip region. Same tournament, same
+    rates — only the RNG/fusion structure differs (the streams do too;
+    this row measures cost, the equivalence suite pins correctness)."""
+    _, _, spec, pop, xi, labels = _cardio_workload()
+    t = spec.table()
+    rank = jnp.zeros((_POP,), jnp.int32)
+    crowd = jnp.ones((_POP,), jnp.float32)
+    pc, pm = jnp.float32(0.7), jnp.float32(0.02)
+
+    def foldin_uniform(key, ids, n):
+        # the PR-4 gene_uniform: fold_in per gene, then a per-gene uniform
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+        return jax.vmap(lambda k: jax.random.uniform(k, (n,)),
+                        out_axes=1)(keys)
+
+    def seed_offspring(key, pop):
+        k_sel, k_cx, k_var = variation_keys(key)
+        parents = nsga2.tournament_select(k_sel, rank, crowd, _POP)
+        pa, pb = pop[parents[: _POP // 2]], pop[parents[_POP // 2:]]
+        k1, k2 = jax.random.split(k_cx)
+        do = jax.random.uniform(k1, (_POP // 2, 1)) < pc
+        take_b = foldin_uniform(k2, t.ids, _POP // 2) < 0.5
+        children = jnp.concatenate([jnp.where(do & take_b, pb, pa),
+                                    jnp.where(do & take_b, pa, pb)])
+        m1, m2, m3 = jax.random.split(k_var, 3)
+        do_m = foldin_uniform(m1, t.ids, _POP) < pm
+        bitpos = jnp.floor(foldin_uniform(m2, t.ids, _POP)
+                           * jnp.maximum(t.mask_bits, 1)).astype(jnp.int32)
+        flipped = jnp.bitwise_xor(children, jnp.left_shift(1, bitpos))
+        lo, hi = t.low.astype(jnp.float32), t.high.astype(jnp.float32)
+        reset = jnp.floor(lo + foldin_uniform(m3, t.ids, _POP)
+                          * (hi - lo)).astype(jnp.int32)
+        children = jnp.where(do_m, jnp.where(t.is_mask, flipped, reset),
+                             children)
+        return jnp.clip(children, t.low, t.high - 1)
+
+    key = jax.random.PRNGKey(common.BENCH_SEED)
+    seed_fn = jax.jit(seed_offspring)
+    fused_fn = jax.jit(lambda k, p: population_variation(
+        k, p, rank, crowd, genes=t, pc=pc, pm=pm, backend="ref"))
+    # sub-ms calls on a jittery runner: alternate 50-iter means of the two
+    # sides five times and take each side's min, so both sample the same
+    # load windows and the ratio stays stable
+    seed_ts, fused_ts = [], []
+    for _ in range(5):
+        seed_ts.append(_time(lambda: seed_fn(key, pop).block_until_ready(),
+                             iters=50))
+        fused_ts.append(_time(lambda: fused_fn(key, pop).block_until_ready(),
+                              iters=50))
+    dt_seed, dt_fused = min(seed_ts), min(fused_ts)
+    speedup = dt_seed / dt_fused
+    results["variation_fused"] = {
+        "us_per_call_seed_foldin": dt_seed * 1e6,
+        "us_per_call_fused": dt_fused * 1e6,
+        "pop": _POP, "genes": int(spec.n_genes), "backend": "ref-fused"}
+    results["variation_speedup_vs_seed"] = speedup
+    emit_row("kernel/variation_fused", dt_fused * 1e6,
+             f"pop={_POP}|genes={spec.n_genes}"
+             f"|seed_foldin_us={dt_seed * 1e6:.0f}"
+             f"|speedup_vs_seed={speedup:.2f}x")
+
+
+def bench_phase_breakdown(results):
+    """Per-phase wall clock of one GA generation (pop=256, cardio).
+
+    Times the three traced regions a generation is made of — variation
+    (tournament → crossover → mutation → clip), fitness (the
+    ``population_correct`` "ref" dispatch over the children) and ranking
+    (dominance matrix → front peel → crowding → survivor truncation on
+    the (μ+λ) pool) — each as its own jitted call, so future PRs can see
+    which phase dominates before picking a target. The full scanned
+    trainer fuses all three; these rows are the unfused upper bound."""
+    ds, topo, spec, pop, xi, labels = _cardio_workload()
+    cfg = GAConfig(pop_size=_POP, fitness_backend="ref",
+                   seed=common.BENCH_SEED)
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    state, _ = jax.jit(lambda p: engine.init_state(
+        p, jax.random.PRNGKey(common.BENCH_SEED), None))(problem)
+
+    var_fn = jax.jit(lambda p, s: population_variation(
+        jax.random.split(s.key)[1], s.pop, s.rank, s.crowd, genes=p.genes,
+        pc=p.crossover_rate, pm=p.mutation_rate_gene, backend="ref"))
+    dt_var = _time(lambda: var_fn(problem, state).block_until_ready(),
+                   iters=20)
+    children = var_fn(problem, state)
+
+    fit_fn = jax.jit(lambda p, rows: engine.population_counts(p, rows))
+    dt_fit = _time(lambda: fit_fn(problem, children).block_until_ready(),
+                   iters=20)
+
+    obj = jnp.concatenate([state.obj, state.obj])
+    viol = jnp.concatenate([state.viol, state.viol])
+
+    def ranking(obj, viol):
+        dom = nsga2.dominance_matrix(obj, viol)
+        rank, crowd = nsga2.ranking_from_dom(dom, obj)
+        keep = nsga2.survivor_select(rank, crowd, _POP)
+        return nsga2.subset_ranking(dom, obj, keep)
+
+    rank_fn = jax.jit(ranking)
+    dt_rank = _time(lambda: rank_fn(obj, viol)[0].block_until_ready(),
+                    iters=20)
+
+    results["phase_breakdown"] = {
+        "variation_us_per_gen": dt_var * 1e6,
+        "fitness_us_per_gen": dt_fit * 1e6,
+        "ranking_us_per_gen": dt_rank * 1e6,
+        "pop": _POP, "samples": int(xi.shape[0]),
+        "backend": "ref (unfused per-phase dispatches)"}
+    total = dt_var + dt_fit + dt_rank
+    emit_row("kernel/phase_breakdown", total * 1e6,
+             f"variation_us={dt_var * 1e6:.0f}|fitness_us={dt_fit * 1e6:.0f}"
+             f"|ranking_us={dt_rank * 1e6:.0f}|pop={_POP}")
 
 
 def bench_fitness_trainer(results, dedup: bool, gens: int = 20):
@@ -322,6 +458,8 @@ def run():
     results = {}
     bench_fitness_throughput(results)
     bench_fitness_dispatch(results)
+    bench_variation(results)
+    bench_phase_breakdown(results)
     bench_fitness_trainer(results, dedup=False)
     bench_fitness_trainer(results, dedup=True)
     bench_fitness_batched(results)
@@ -335,6 +473,8 @@ def run():
     with open(_RESULTS_PATH, "w") as f:
         json.dump(results, f, indent=1, default=float)
     print(f"# fitness dispatch speedup vs seed oracle: {speedup:.2f}x, "
+          f"fused variation vs per-gene fold_in: "
+          f"{results['variation_speedup_vs_seed']:.2f}x, "
           f"scanned trainer w/ dedup: "
           f"{results['trainer_dedup_on_speedup_vs_seed']:.2f}x, "
           f"8-seed batched vs sequential: "

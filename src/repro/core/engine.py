@@ -44,9 +44,9 @@ from .area import population_area
 from .dedup import dedup_eval
 from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
                     subset_ranking, survivor_select)
-from .operators import make_offspring
 from .pareto import pareto_front
 from ..kernels.pop_mlp import population_correct
+from ..kernels.pop_variation import population_variation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +62,12 @@ class GAConfig:
     log_every: int = 10
     # -- fitness hot-path knobs (all bit-exact w.r.t. the naive loop) -------
     fitness_backend: str = "auto"    # auto|kernel|interpret|ref|jnp
-    pop_tile: int = 64               # population tile ("ref" backend)
+    # variation hot path: auto|kernel|interpret|ref|ops — all bit-identical
+    # (kernels.pop_variation; "ops" is the chained legacy operator oracle)
+    variation_backend: str = "auto"
+    # population tile — shared by the fitness "ref" backend and the
+    # variation Pallas kernel (one knob tiles both hot paths)
+    pop_tile: int = 64
     sample_tile: int = 256           # sample tile ("ref" backend)
     dedup: bool = True               # duplicate-chromosome eval caching
     scan: bool = True                # lax.scan over generations (one dispatch)
@@ -132,6 +137,7 @@ class Problem:
     genes: GeneTable = None                  # per-gene operator metadata
     out_mask: jnp.ndarray = None             # (n_out,) int32 valid columns
     inv_n: jnp.ndarray = None                # () float32 = 1 / n_valid_samples
+    n_valid_samples: jnp.ndarray = None      # () int32 true (unpadded) S
 
     def __post_init__(self):
         if self.crossover_rate is None:
@@ -146,24 +152,30 @@ class Problem:
             self.out_mask = jnp.ones((self.spec.topo.sizes[-1],), jnp.int32)
         if self.inv_n is None:
             self.inv_n = jnp.float32(1.0 / self.labels.shape[0])
+        if self.n_valid_samples is None:
+            self.n_valid_samples = jnp.int32(self.labels.shape[0])
 
     def tree_flatten(self):
         return ((self.x_int, self.labels, self.baseline_acc,
                  self.crossover_rate, self.mutation_rate_gene,
                  self.max_acc_loss, self.genes, self.out_mask,
-                 self.inv_n), (self.spec, self.cfg))
+                 self.inv_n, self.n_valid_samples), (self.spec, self.cfg))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children[:3], *aux, *children[3:])
 
     def with_hypers(self, crossover_rate=None, mutation_rate_gene=None,
-                    max_acc_loss=None) -> "Problem":
+                    max_acc_loss=None, baseline_acc=None) -> "Problem":
         """Replace the swept hyperparameter leaves (None keeps the current
-        value); traced replacements are how a sweep builds its cells."""
+        value); traced replacements are how a sweep builds its cells.
+        ``baseline_acc`` is sweepable too — it only enters the violation
+        chain, so sweeping it varies the constraint pressure of the
+        feasibility bound without touching the data."""
         kw = {k: v for k, v in [("crossover_rate", crossover_rate),
                                 ("mutation_rate_gene", mutation_rate_gene),
-                                ("max_acc_loss", max_acc_loss)]
+                                ("max_acc_loss", max_acc_loss),
+                                ("baseline_acc", baseline_acc)]
               if v is not None}
         return dataclasses.replace(self, **kw)
 
@@ -196,9 +208,11 @@ def pad_problem(problem: Problem, spec_pad: GenomeSpec,
     their draw ids and bounds at the embedded positions (padding is
     canonical zero — ``genome.padded_table``), extra input columns are
     zero (AND-masked activations contribute nothing), ``out_mask`` pins
-    padded output columns below any real logit, and ``inv_n`` keeps the
-    original sample count. ``n_samples`` additionally pads the sample axis
-    (features 0, label −1 — never matched by an argmax) so several
+    padded output columns below any real logit, and ``inv_n`` /
+    ``n_valid_samples`` keep the original sample count (the latter lets
+    the tiled fitness backends *skip* all-padding sample tiles — see
+    :func:`population_counts`). ``n_samples`` additionally pads the sample
+    axis (features 0, label −1 — never matched by an argmax) so several
     datasets can stack on a suite axis.
 
     The count-based fitness backends handle all of this exactly; the "jnp"
@@ -225,7 +239,7 @@ def pad_problem(problem: Problem, spec_pad: GenomeSpec,
     return Problem(x, labels, problem.baseline_acc, spec_pad, problem.cfg,
                    problem.crossover_rate, problem.mutation_rate_gene,
                    problem.max_acc_loss, genes, jnp.asarray(out_mask),
-                   problem.inv_n)
+                   problem.inv_n, problem.n_valid_samples)
 
 
 # -- fitness ----------------------------------------------------------------
@@ -237,13 +251,23 @@ def population_counts(problem: Problem, pop, n_valid=None):
     and carry unspecified values — callers overwrite them. Dedup caches
     these *integer* counts, never derived floats: the float objective
     chain is then built once per generation on the actual children, so
-    XLA fusion decisions can't introduce ulp drift vs the naive loop."""
+    XLA fusion decisions can't introduce ulp drift vs the naive loop.
+
+    Sample tiles past the ``n_valid_samples`` bound are skipped the same
+    way: padded samples (label −1) contribute zero counts, so dropping
+    their tiles is bit-identical. Under a whole-run batch the bound is
+    the ``lax.pmax`` over the batch axis — an unbatched scalar, keeping
+    the tile-skip a real ``lax.cond`` — so a suite dispatch costs each
+    lane its bucket's widest dataset, not the global padded axis."""
     cfg = problem.cfg
+    n_samp = problem.n_valid_samples
+    if cfg.batch_axis is not None:
+        n_samp = jax.lax.pmax(n_samp, cfg.batch_axis)
     return population_correct(
         pop, problem.x_int, problem.labels, spec=problem.spec,
         backend=cfg.fitness_backend, pop_tile=cfg.pop_tile,
         sample_tile=cfg.sample_tile, n_valid_rows=n_valid,
-        out_mask=problem.out_mask)
+        n_valid_samples=n_samp, out_mask=problem.out_mask)
 
 
 def counts_accuracy(problem: Problem, counts):
@@ -353,9 +377,10 @@ def generation(problem: Problem, state: GAState):
     cfg = problem.cfg
     P = state.pop.shape[0]
     key, k_off = jax.random.split(state.key)
-    children = make_offspring(k_off, state.pop, state.rank, state.crowd,
-                              problem.genes, problem.crossover_rate,
-                              problem.mutation_rate_gene)
+    children = population_variation(
+        k_off, state.pop, state.rank, state.crowd, genes=problem.genes,
+        pc=problem.crossover_rate, pm=problem.mutation_rate_gene,
+        backend=cfg.variation_backend, pop_tile=cfg.pop_tile)
     pop = jnp.concatenate([state.pop, children], axis=0)
     if use_dedup(cfg):
         # count only children that duplicate neither a parent nor each
@@ -439,6 +464,12 @@ def run_batch(problem: Problem, seeds, generations: int | None = None,
     ``lax.cond``: the runs share one ``lax.pmax`` evaluation bound
     (``BATCH_AXIS``), so tiles past the widest run's unique-row count are
     genuinely skipped instead of degrading to a both-branches select.
+
+    Buffer donation: the GAState carry lives entirely *inside* this
+    dispatch (init → scan in one program), so XLA aliases it across scan
+    iterations automatically and there is nothing to donate at this
+    boundary; the donated boundaries are the adapters that pass a state
+    back in per call (``GATrainer``'s step/scan jits, the islands round).
     """
     gens = problem.cfg.generations if generations is None else generations
     problem = batch_problem(problem)

@@ -111,12 +111,15 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
         return pop, obj, viol, counts, rank, crowd, key[None]
 
     pspec = P(axis_names)
+    # the carry (pop/obj/viol/counts/rank/crowd/key) is donated: round_fn
+    # callers rebind it every round, so its buffers update in place
+    # instead of being copied per dispatch (aliasing only — bit-identical)
     sharded_round = jax.jit(shard_map(
         island_round, mesh=mesh,
         in_specs=(P(),) + (pspec,) * 7,   # problem replicated, state sharded
         out_specs=(pspec,) * 7,
         check_rep=False,
-    ))
+    ), donate_argnums=tuple(range(1, 8)))
 
     # island i == GATrainer(seed + i)'s initial state, all islands in one
     # vmapped dispatch (512 islands ≠ 512 sequential inits). The problem is

@@ -10,21 +10,33 @@ NSGA-II regime) and expose both as config — see GAConfig defaults.
 
 Every operator reads its per-gene metadata from a :class:`GeneTable` (traced
 leaves, so a suite batch can carry a different table per lane) and draws all
-gene-shaped randomness through :func:`gene_uniform` — addressed by the
-table's draw ids, never by the gene-axis length. Consequences:
+gene-shaped randomness through :func:`genome.gene_uniform` — addressed by
+(key, draw slot, table id, row), never by the gene-axis length. Consequences:
 
   * a padded chromosome evolves bit-identically to its unpadded original
     (valid genes share ids, so they see the same draws), and
   * padding genes can never move off the canonical zero: their bounds are
     [0, 1) (reset and init floor to 0), ``is_mask`` is False (no bit
     flips), and the final clip pins them to [0, 0].
+
+Key/slot scheme (shared with ``repro.kernels.pop_variation``): one
+generation key splits via :func:`variation_keys` into ``(k_sel, k_cx,
+k_var)`` — tournament index draws, the per-pair crossover-do draw, and the
+single gene-draw key whose three slots (``SLOT_CROSS_SWAP``,
+``SLOT_MUT_DO``, ``SLOT_MUT_VAL``) cover every (pop, genes)-shaped
+uniform of the generation. Because slot draws are row/length-independent,
+this chain of separate operator calls is bit-identical to the fused
+``pop_variation`` dispatcher at the same key — ``make_offspring`` is kept
+as that oracle (the dispatcher's "ops" backend; equivalence-tested in
+tests/test_variation_path.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .genome import GenomeSpec, GeneTable, gene_uniform
+from .genome import (GenomeSpec, GeneTable, gene_uniform,
+                     SLOT_CROSS_SWAP, SLOT_MUT_DO, SLOT_MUT_VAL)
 from .nsga2 import tournament_select
 
 
@@ -32,35 +44,52 @@ def _as_table(genes) -> GeneTable:
     return genes.table() if isinstance(genes, GenomeSpec) else genes
 
 
-def uniform_crossover(key, a: jnp.ndarray, b: jnp.ndarray, pc: float,
-                      ids: jnp.ndarray):
-    """Pairwise uniform crossover. a, b: (n, genes) parent pools; ``ids``
-    addresses the per-gene swap draws (GeneTable.ids)."""
-    k1, k2 = jax.random.split(key)
-    do = jax.random.uniform(k1, (a.shape[0], 1)) < pc
-    take_b = gene_uniform(k2, ids, a.shape[0]) < 0.5
+def variation_keys(key):
+    """(k_sel, k_cx, k_var): tournament, crossover-do, and gene-draw keys.
+
+    THE key schedule of one generation's variation — the legacy operator
+    chain and the fused ``kernels.pop_variation`` backends all start here,
+    which is why they are mutually bit-identical."""
+    return jax.random.split(key, 3)
+
+
+def uniform_crossover(key_do, key_genes, a, b, pc: float, ids: jnp.ndarray):
+    """Pairwise uniform crossover. a, b: (n, genes) parent pools.
+
+    ``key_do`` draws the per-pair do-crossover gate; ``key_genes`` is the
+    generation's shared gene-draw key — the swap draw is its
+    ``SLOT_CROSS_SWAP`` slot, addressed by the per-gene ``ids``
+    (GeneTable.ids)."""
+    do = jax.random.uniform(key_do, (a.shape[0], 1)) < pc
+    take_b = gene_uniform(key_genes, ids, a.shape[0],
+                          slot=SLOT_CROSS_SWAP) < 0.5
     child1 = jnp.where(do & take_b, b, a)
     child2 = jnp.where(do & take_b, a, b)
     return child1, child2
 
 
-def mutate(key, pop: jnp.ndarray, genes, pm_gene: float) -> jnp.ndarray:
-    """Per-gene mutation: bit-flip for masks, random reset otherwise."""
+def mutate(key_genes, pop: jnp.ndarray, genes, pm_gene: float) -> jnp.ndarray:
+    """Per-gene mutation: bit-flip for masks, random reset otherwise.
+
+    ``key_genes`` is the generation's shared gene-draw key; the gate is
+    its ``SLOT_MUT_DO`` slot and the value its ``SLOT_MUT_VAL`` slot —
+    ONE uniform read as the flipped-bit position on mask genes and as the
+    reset value everywhere else (only one interpretation is ever consumed
+    per gene, so sharing the draw is sound and saves a third of the
+    mutation hashes)."""
     t = _as_table(genes)
     P = pop.shape[0]
-    k1, k2, k3 = jax.random.split(key, 3)
-    do = gene_uniform(k1, t.ids, P) < pm_gene
+    do = gene_uniform(key_genes, t.ids, P, slot=SLOT_MUT_DO) < pm_gene
+    u = gene_uniform(key_genes, t.ids, P, slot=SLOT_MUT_VAL)
 
     # mask genes: flip one uniformly chosen bit of the mask
-    u = gene_uniform(k2, t.ids, P)
     bitpos = jnp.floor(u * jnp.maximum(t.mask_bits, 1)).astype(jnp.int32)
     flipped = jnp.bitwise_xor(pop, jnp.left_shift(1, bitpos))
 
     # other genes: uniform reset in [low, high)
-    u2 = gene_uniform(k3, t.ids, P)
     lo = t.low.astype(jnp.float32)
     hi = t.high.astype(jnp.float32)
-    reset = jnp.floor(lo + u2 * (hi - lo)).astype(jnp.int32)
+    reset = jnp.floor(lo + u * (hi - lo)).astype(jnp.int32)
 
     mutated = jnp.where(t.is_mask, flipped, reset)
     return jnp.where(do, mutated, pop)
@@ -74,14 +103,18 @@ def clip_genes(pop: jnp.ndarray, genes) -> jnp.ndarray:
 
 def make_offspring(key, pop: jnp.ndarray, rank, crowd, genes,
                    pc: float, pm_gene: float) -> jnp.ndarray:
-    """Tournament → crossover → mutation: produces |pop| children."""
+    """Tournament → crossover → mutation → clip as chained operator calls.
+
+    This is the seed-semantics oracle of the fused variation dispatcher
+    (``kernels.pop_variation``, backend "ops") — same keys, same slots,
+    bit-identical children; the trainers route through the dispatcher."""
     t = _as_table(genes)
     P = pop.shape[0]
-    k_sel, k_cx, k_mut = jax.random.split(key, 3)
+    k_sel, k_cx, k_var = variation_keys(key)
     parents = tournament_select(k_sel, rank, crowd, P)
     pa = pop[parents[: P // 2]]
     pb = pop[parents[P // 2:]]
-    c1, c2 = uniform_crossover(k_cx, pa, pb, pc, t.ids)
+    c1, c2 = uniform_crossover(k_cx, k_var, pa, pb, pc, t.ids)
     children = jnp.concatenate([c1, c2], axis=0)
-    children = mutate(k_mut, children, t, pm_gene)
+    children = mutate(k_var, children, t, pm_gene)
     return clip_genes(children, t)

@@ -31,12 +31,16 @@ Typical use (see ``examples/hyperparam_sweep.py``)::
 Suite batching (:func:`run_suite`) adds the last sequential axis: the
 *dataset*. Each per-dataset Problem (its own topology, sample count, class
 count, baseline) is embedded into one shared max-shape ``GenomeSpec`` via
-``engine.pad_problem`` — per-gene bounds/ids, the output-column mask and the
-1/n accuracy factor become traced leaves — and the (dataset × seed × config)
-cells stack on ONE vmap axis. Every cell is bit-identical to the *unpadded*
-sequential ``GATrainer.run`` on that dataset (gene-addressed PRNG draws +
-canonical-zero padding; tests/test_suite.py), so the paper's whole 5-dataset
-experiment table is one dispatch (``benchmarks/common.ga_run_suite``).
+``engine.pad_problem`` — per-gene bounds/ids, the output-column mask, the
+1/n accuracy factor and the true sample count become traced leaves — and
+the (dataset × seed × config) cells stack on a vmap axis, one dispatch per
+*sample-size bucket* (all buckets share a single compiled program; tiles
+of padded samples are skipped via the ``n_valid_samples`` pmax bound, so a
+lane costs its own dataset's samples, not the widest one's). Every cell is
+bit-identical to the *unpadded* sequential ``GATrainer.run`` on that
+dataset (gene-addressed PRNG draws + canonical-zero padding;
+tests/test_suite.py), so the paper's whole 5-dataset experiment table is a
+handful of shared-program dispatches (``benchmarks/common.ga_run_suite``).
 """
 from __future__ import annotations
 
@@ -54,60 +58,68 @@ from .engine import GAState, Problem
 
 
 def grid_cells(seeds, crossover_rates=None, mutation_rates=None,
-               max_acc_losses=None, cfg=None, problem=None):
+               max_acc_losses=None, baseline_accs=None, cfg=None,
+               problem=None):
     """Cartesian (seed × config) grid as flat per-cell arrays.
 
     ``None`` axes collapse to a single default value: the ``problem``'s
     hyperparameter *leaves* when given (the values a batched run of that
     problem would use — ``run_grid`` passes this), else the ``cfg``
-    statics. Returns a dict with int32 ``seed`` and float32
-    ``crossover_rate``/``mutation_rate_gene``/``max_acc_loss`` arrays of
-    shape (n_cells,), plus the grid ``shape`` tuple
-    (n_seeds, n_crossover, n_mutation, n_max_loss) — cells are laid out in
-    C order over that shape."""
+    statics (``baseline_acc`` has no cfg static; its cfg-mode default is
+    1.0, the chance-level convention of ``GATrainer``). Returns a dict
+    with int32 ``seed`` and float32 ``crossover_rate``/
+    ``mutation_rate_gene``/``max_acc_loss``/``baseline_acc`` arrays of
+    shape (n_cells,), plus the grid ``shape`` tuple (n_seeds, n_crossover,
+    n_mutation, n_max_loss, n_baseline) — cells are laid out in C order
+    over that shape."""
     if problem is not None:
-        pc0, pm0, mal0 = (float(problem.crossover_rate),
-                          float(problem.mutation_rate_gene),
-                          float(problem.max_acc_loss))
+        pc0, pm0, mal0, ba0 = (float(problem.crossover_rate),
+                               float(problem.mutation_rate_gene),
+                               float(problem.max_acc_loss),
+                               float(problem.baseline_acc))
     else:
         cfg = cfg if cfg is not None else engine.GAConfig()
-        pc0, pm0, mal0 = (cfg.crossover_rate, cfg.mutation_rate_gene,
-                          cfg.max_acc_loss)
+        pc0, pm0, mal0, ba0 = (cfg.crossover_rate, cfg.mutation_rate_gene,
+                               cfg.max_acc_loss, 1.0)
     axes = [np.asarray(list(seeds), np.int32),
             np.asarray([pc0] if crossover_rates is None
                        else list(crossover_rates), np.float32),
             np.asarray([pm0] if mutation_rates is None
                        else list(mutation_rates), np.float32),
             np.asarray([mal0] if max_acc_losses is None
-                       else list(max_acc_losses), np.float32)]
+                       else list(max_acc_losses), np.float32),
+            np.asarray([ba0] if baseline_accs is None
+                       else list(baseline_accs), np.float32)]
     shape = tuple(len(a) for a in axes)
     grids = np.meshgrid(*axes, indexing="ij")
     return {"seed": grids[0].reshape(-1),
             "crossover_rate": grids[1].reshape(-1),
             "mutation_rate_gene": grids[2].reshape(-1),
             "max_acc_loss": grids[3].reshape(-1),
+            "baseline_acc": grids[4].reshape(-1),
             "shape": shape}
 
 
-def _run_cells(problem: Problem, seeds, pcs, pms, mals, doping,
+def _run_cells(problem: Problem, seeds, pcs, pms, mals, baccs, doping,
                generations: int):
     """vmap (init → scanned run) over the flat cell axis; the swept
     hyperparameters become per-cell Problem leaves inside the vmap."""
-    def one(seed, pc, pm, mal):
+    def one(seed, pc, pm, mal, bacc):
         p = problem.with_hypers(crossover_rate=pc, mutation_rate_gene=pm,
-                                max_acc_loss=mal)
+                                max_acc_loss=mal, baseline_acc=bacc)
         state, n0 = engine.init_state(p, jax.random.PRNGKey(seed), doping)
         state, aux = engine.run_scanned(p, state, generations)
         return state, aux, n0
 
-    return jax.vmap(one, axis_name=engine.BATCH_AXIS)(seeds, pcs, pms, mals)
+    return jax.vmap(one, axis_name=engine.BATCH_AXIS)(seeds, pcs, pms, mals,
+                                                      baccs)
 
 
 _run_cells_jit = jax.jit(_run_cells, static_argnames="generations")
 
 
-def _run_cells_sharded(problem: Problem, seeds, pcs, pms, mals, doping,
-                       generations: int, mesh: Mesh,
+def _run_cells_sharded(problem: Problem, seeds, pcs, pms, mals, baccs,
+                       doping, generations: int, mesh: Mesh,
                        axis_names: tuple[str, ...]):
     """shard_map the cell axis over ``mesh``: each device vmaps its slice
     of cells with the data replicated. Cells are padded (by repeating the
@@ -120,17 +132,19 @@ def _run_cells_sharded(problem: Problem, seeds, pcs, pms, mals, doping,
     if pad:
         def padded(a):
             return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
-        seeds, pcs, pms, mals = map(padded, (seeds, pcs, pms, mals))
+        seeds, pcs, pms, mals, baccs = map(
+            padded, (seeds, pcs, pms, mals, baccs))
 
     pspec = P(axis_names)
     fn = jax.jit(shard_map(
-        lambda p, s, a, b, c, d: _run_cells(p, s, a, b, c, d, generations),
+        lambda p, s, a, b, c, d, e: _run_cells(p, s, a, b, c, d, e,
+                                               generations),
         mesh=mesh,
-        in_specs=(P(), pspec, pspec, pspec, pspec, P()),
+        in_specs=(P(), pspec, pspec, pspec, pspec, pspec, P()),
         out_specs=pspec,
         check_rep=False,
     ))
-    out = fn(problem, seeds, pcs, pms, mals, doping)
+    out = fn(problem, seeds, pcs, pms, mals, baccs, doping)
     if pad:
         out = jax.tree_util.tree_map(lambda x: x[:n], out)
     return out
@@ -144,7 +158,8 @@ class SweepResult:
     axis; ``aux`` is (best_err, best_area, n_eval), each (n_cells, gens);
     ``init_evals`` is the per-cell unique-row count of the initial scoring.
     Cells are C-ordered over ``shape`` = (n_seeds, n_crossover,
-    n_mutation, n_max_loss) and described by the flat ``cells`` arrays."""
+    n_mutation, n_max_loss, n_baseline) and described by the flat
+    ``cells`` arrays."""
     problem: Problem
     cells: dict
     states: GAState
@@ -164,7 +179,8 @@ class SweepResult:
         return {"seed": int(self.cells["seed"][i]),
                 "crossover_rate": float(self.cells["crossover_rate"][i]),
                 "mutation_rate_gene": float(self.cells["mutation_rate_gene"][i]),
-                "max_acc_loss": float(self.cells["max_acc_loss"][i])}
+                "max_acc_loss": float(self.cells["max_acc_loss"][i]),
+                "baseline_acc": float(self.cells["baseline_acc"][i])}
 
     def state_at(self, i: int) -> GAState:
         return engine.state_at(self.states, i)
@@ -183,7 +199,7 @@ class SweepResult:
 
 
 def run_grid(problem: Problem, seeds, *, crossover_rates=None,
-             mutation_rates=None, max_acc_losses=None,
+             mutation_rates=None, max_acc_losses=None, baseline_accs=None,
              generations: int | None = None, doping_seeds=None,
              mesh: Mesh | None = None,
              axis_names: tuple[str, ...] = ("data",),
@@ -194,6 +210,10 @@ def run_grid(problem: Problem, seeds, *, crossover_rates=None,
     crossover_rates / mutation_rates / max_acc_losses: swept values for the
         corresponding ``GAConfig`` knob; ``None`` keeps the problem's
         single configured value for that axis.
+    baseline_accs: swept values of the ``baseline_acc`` Problem leaf — a
+        constraint-pressure axis: the feasibility bound is
+        ``acc ≥ baseline_acc − max_acc_loss``, so a higher baseline
+        tightens every cell's constraint without touching the data.
     generations: overrides ``problem.cfg.generations``.
     doping_seeds: the same doping genomes for every cell (paper §IV-A).
     mesh / axis_names: when given, the flat cell axis is sharded over the
@@ -201,19 +221,21 @@ def run_grid(problem: Problem, seeds, *, crossover_rates=None,
         replicated) — bit-identical to the single-device vmap.
 
     Every cell is bit-identical to a sequential ``GATrainer.run`` whose
-    ``GAConfig`` carries that cell's hyperparameters and seed.
+    ``GAConfig`` carries that cell's hyperparameters and seed (and whose
+    ``baseline_acc`` argument carries the cell's baseline).
     """
     # unswept axes keep the problem's (possibly with_hypers-replaced)
     # leaf values, matching what run_batch would run — not the cfg statics
     cells = grid_cells(seeds, crossover_rates, mutation_rates,
-                       max_acc_losses, problem=problem)
+                       max_acc_losses, baseline_accs, problem=problem)
     gens = problem.cfg.generations if generations is None else generations
     problem = engine.batch_problem(problem)
     doping = engine._doping_array(doping_seeds)
     args = (jnp.asarray(cells["seed"]),
             jnp.asarray(cells["crossover_rate"]),
             jnp.asarray(cells["mutation_rate_gene"]),
-            jnp.asarray(cells["max_acc_loss"]))
+            jnp.asarray(cells["max_acc_loss"]),
+            jnp.asarray(cells["baseline_acc"]))
     if mesh is not None:
         states, aux, n0 = _run_cells_sharded(problem, *args, doping, gens,
                                              mesh, axis_names)
@@ -313,7 +335,8 @@ class SuiteResult:
                 "crossover_rate": float(self.cells["crossover_rate"][i]),
                 "mutation_rate_gene":
                     float(self.cells["mutation_rate_gene"][i]),
-                "max_acc_loss": float(self.cells["max_acc_loss"][i])}
+                "max_acc_loss": float(self.cells["max_acc_loss"][i]),
+                "baseline_acc": float(self.cells["baseline_acc"][i])}
 
     def cells_of(self, name) -> list:
         """Flat indices of every cell of dataset ``name`` (label or index),
@@ -340,36 +363,74 @@ class SuiteResult:
         return int(self.init_evals[i]) + int(np.asarray(self.aux[2][i]).sum())
 
 
+def _sample_buckets(sizes, factor):
+    """Group dataset indices so no lane pads its sample axis by more than
+    ``factor``. Greedy over sizes in descending order: a dataset joins the
+    current bucket while ``bucket_max <= factor * its_size``; the returned
+    buckets are each internally sorted by original index."""
+    if factor is None:
+        return [list(range(len(sizes)))]
+    order = sorted(range(len(sizes)), key=lambda d: -sizes[d])
+    buckets, bound = [], None
+    for d in order:
+        if bound is not None and bound <= factor * sizes[d]:
+            buckets[-1].append(d)
+        else:
+            buckets.append([d])
+            bound = sizes[d]
+    return [sorted(b) for b in buckets]
+
+
 def run_suite(problems, seeds, *, crossover_rates=None, mutation_rates=None,
-              max_acc_losses=None, generations: int | None = None,
+              max_acc_losses=None, baseline_accs=None,
+              generations: int | None = None,
               doping_seeds=None, names=None,
               spec: "engine.GenomeSpec | None" = None,
+              sample_bucket_factor: float | None = 1.0,
               mesh: Mesh | None = None,
               axis_names: tuple[str, ...] = ("data",),
               jit: bool = True) -> SuiteResult:
-    """Run several datasets' (seed × config) grids as ONE dispatch.
+    """Run several datasets' (seed × config) grids as one batched dispatch
+    per sample-size bucket — equal-size buckets sharing one compiled
+    program (every lane is padded to the same global shapes).
 
     problems: per-dataset Problems (different topologies/sample counts are
         fine — they embed into one max-shape layout). All must share the
         same ``GAConfig`` (one traced program ⇒ one population size, one
         generation count, one backend).
-    seeds / crossover_rates / mutation_rates / max_acc_losses: as in
-        :func:`run_grid`; the cartesian grid repeats per dataset.
+    seeds / crossover_rates / mutation_rates / max_acc_losses /
+        baseline_accs: as in :func:`run_grid`; the cartesian grid repeats
+        per dataset (an unswept baseline axis keeps each dataset's own
+        baseline leaf).
     doping_seeds: optional list (aligned with ``problems``) of per-dataset
         doping genomes in their *unpadded* layouts (paper §IV-A); each
         dataset's seeds are host-expanded to the doped row block and
         scattered into the padded layout, so cell inits replicate the
         sequential trainer's doping bit-for-bit.
     names: per-dataset labels for ``SuiteResult.cell``/``cells_of``.
+    sample_bucket_factor: every dispatch's lanes pay the sample-tile
+        bound of its *widest* lane (``Problem.n_valid_samples`` pmax'd
+        over the batch — tiles past it are skipped, see
+        ``engine.population_counts``), so datasets are greedily grouped
+        such that no lane overpays by more than this factor and each
+        group dispatches separately. Every lane is still padded to the
+        global suite max, so equal-dataset-count groups share a compiled
+        program (with the default factor all paper-suite buckets do) —
+        bucketing trades a few extra dispatches for fitness work
+        proportional to the true sample counts instead of the padded
+        axis (~2.7× on the paper suite). ``None`` = one dispatch for
+        everything (the widest dataset's bound for all). Bucketing is
+        pure batch composition: per-cell results are bit-identical
+        regardless.
     mesh / axis_names: shard the flat cell axis via ``shard_map``
-        (bit-identical to the single-device vmap).
+        (bit-identical to the single-device vmap; applied per bucket).
 
     Every cell is bit-identical to the sequential **unpadded**
     ``GATrainer.run`` on that dataset with the cell's seed and
     hyperparameters — including the dedup ``unique_row_evals`` accounting
-    (the cells share one ``lax.pmax`` evaluation bound; rows between a
-    cell's own count and the shared bound are evaluated but never
-    gathered).
+    (each bucket's cells share one ``lax.pmax`` evaluation bound; rows
+    between a cell's own count and the shared bound are evaluated but
+    never gathered).
     """
     problems = list(problems)
     if not problems:
@@ -382,54 +443,80 @@ def run_suite(problems, seeds, *, crossover_rates=None, mutation_rates=None,
     names = list(names) if names is not None else list(range(len(problems)))
     gens = cfg0.generations if generations is None else generations
     spec_pad = suite_spec(problems) if spec is None else spec
-    s_max = max(int(p.x_int.shape[0]) for p in problems)
     positions = [genome_mod.pad_positions(p.spec, spec_pad) for p in problems]
-    padded = [engine.batch_problem(engine.pad_problem(p, spec_pad, s_max))
-              for p in problems]
+    sizes = [int(p.x_int.shape[0]) for p in problems]
+    buckets = _sample_buckets(sizes, sample_bucket_factor)
 
-    # flat cells: dataset-major, then the per-dataset (seed × config) grid
-    cell_problems, cell_dope, meta = [], [], []
     n_dope = max(1, int(cfg0.doping_frac * cfg0.pop_size))
     if doping_seeds is not None and len(doping_seeds) != len(problems):
         raise ValueError("doping_seeds must align with problems")
-    for d, p in enumerate(padded):
-        cells_d = grid_cells(seeds, crossover_rates, mutation_rates,
-                             max_acc_losses, problem=p)
-        if doping_seeds is not None:
-            dope = np.asarray(engine._doping_array(doping_seeds[d]))
-            reps = np.resize(np.arange(dope.shape[0]), n_dope)
-            dope_rows = genome_mod.pad_genomes(dope[reps], positions[d],
-                                               spec_pad.n_genes)
-        for k in range(cells_d["seed"].shape[0]):
-            cell_problems.append(p.with_hypers(
-                jnp.float32(cells_d["crossover_rate"][k]),
-                jnp.float32(cells_d["mutation_rate_gene"][k]),
-                jnp.float32(cells_d["max_acc_loss"][k])))
-            if doping_seeds is not None:
-                cell_dope.append(dope_rows)
-            meta.append((d, cells_d["seed"][k],
-                         cells_d["crossover_rate"][k],
-                         cells_d["mutation_rate_gene"][k],
-                         cells_d["max_acc_loss"][k]))
-        grid_shape = cells_d["shape"]
 
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                     *cell_problems)
-    cells = {"dataset": np.asarray([m[0] for m in meta], np.int32),
-             "seed": np.asarray([m[1] for m in meta], np.int32),
-             "crossover_rate": np.asarray([m[2] for m in meta], np.float32),
-             "mutation_rate_gene": np.asarray([m[3] for m in meta],
+    # one dispatch per bucket: every lane is padded to the global s_max,
+    # so buckets with the same dataset count have identical shapes and hit
+    # the jit cache (with the default factor=1.0 on distinct-size datasets
+    # — the paper suite — every bucket does; unequal bucket cardinalities
+    # compile per cardinality). The per-dispatch n_valid_samples pmax
+    # bound makes each bucket's lanes skip sample tiles past the bucket's
+    # widest dataset. The gene axis is shared too, so per-cell outputs of
+    # all buckets have identical shapes and concatenate into dataset order.
+    s_max = max(sizes)
+    per_dataset, meta, grid_shape = {}, {}, None
+    for bucket in buckets:
+        cell_problems, cell_dope, n_grid = [], [], None
+        for d in bucket:
+            p = engine.batch_problem(
+                engine.pad_problem(problems[d], spec_pad, s_max))
+            cells_d = grid_cells(seeds, crossover_rates, mutation_rates,
+                                 max_acc_losses, baseline_accs, problem=p)
+            if doping_seeds is not None:
+                dope = np.asarray(engine._doping_array(doping_seeds[d]))
+                reps = np.resize(np.arange(dope.shape[0]), n_dope)
+                dope_rows = genome_mod.pad_genomes(dope[reps], positions[d],
+                                                   spec_pad.n_genes)
+            for k in range(cells_d["seed"].shape[0]):
+                cell_problems.append(p.with_hypers(
+                    jnp.float32(cells_d["crossover_rate"][k]),
+                    jnp.float32(cells_d["mutation_rate_gene"][k]),
+                    jnp.float32(cells_d["max_acc_loss"][k]),
+                    jnp.float32(cells_d["baseline_acc"][k])))
+                if doping_seeds is not None:
+                    cell_dope.append(dope_rows)
+            meta[d] = [(d, cells_d["seed"][k],
+                        cells_d["crossover_rate"][k],
+                        cells_d["mutation_rate_gene"][k],
+                        cells_d["max_acc_loss"][k],
+                        cells_d["baseline_acc"][k])
+                       for k in range(cells_d["seed"].shape[0])]
+            n_grid = cells_d["seed"].shape[0]
+            grid_shape = cells_d["shape"]
+
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *cell_problems)
+        seed_arr = jnp.asarray(np.concatenate(
+            [[m[1] for m in meta[d]] for d in bucket]).astype(np.int32))
+        doping = (None if doping_seeds is None
+                  else jnp.asarray(np.stack(cell_dope)))
+        if mesh is not None:
+            out = _run_suite_sharded(stacked, seed_arr, doping, gens,
+                                     mesh, axis_names)
+        else:
+            fn = _run_suite_jit if jit else _run_suite_cells
+            out = fn(stacked, seed_arr, doping, gens)
+        for j, d in enumerate(bucket):
+            sl = slice(j * n_grid, (j + 1) * n_grid)
+            per_dataset[d] = jax.tree_util.tree_map(lambda x: x[sl], out)
+
+    flat = [m for d in range(len(problems)) for m in meta[d]]
+    cells = {"dataset": np.asarray([m[0] for m in flat], np.int32),
+             "seed": np.asarray([m[1] for m in flat], np.int32),
+             "crossover_rate": np.asarray([m[2] for m in flat], np.float32),
+             "mutation_rate_gene": np.asarray([m[3] for m in flat],
                                               np.float32),
-             "max_acc_loss": np.asarray([m[4] for m in meta], np.float32),
+             "max_acc_loss": np.asarray([m[4] for m in flat], np.float32),
+             "baseline_acc": np.asarray([m[5] for m in flat], np.float32),
              "shape": (len(problems),) + grid_shape}
-    seed_arr = jnp.asarray(cells["seed"])
-    doping = (None if doping_seeds is None
-              else jnp.asarray(np.stack(cell_dope)))
-    if mesh is not None:
-        states, aux, n0 = _run_suite_sharded(stacked, seed_arr, doping, gens,
-                                             mesh, axis_names)
-    else:
-        fn = _run_suite_jit if jit else _run_suite_cells
-        states, aux, n0 = fn(stacked, seed_arr, doping, gens)
+    states, aux, n0 = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs),
+        *[per_dataset[d] for d in range(len(problems))])
     return SuiteResult(problems, spec_pad, names, positions, cells, states,
                        aux, n0)

@@ -56,13 +56,19 @@ class GATrainer:
         # sweep loop of fresh trainers can't grow a process-global cache).
         # The Problem is a traced ARGUMENT of each, never a closure
         # constant, so the numerics match engine.run_batch /
-        # sweep.run_grid cells exactly (see module docstring).
+        # sweep.run_grid cells exactly (see module docstring). The GAState
+        # argument of the step/scan dispatches is DONATED: the caller
+        # never reads the pre-step state again, so XLA reuses its
+        # population/objective buffers in place instead of copying them
+        # per dispatch (donation aliases buffers, it never changes values).
         self._init_jit = jax.jit(lambda problem, doping: engine.init_state(
             problem, jax.random.PRNGKey(problem.cfg.seed), doping))
         self._step_jit = jax.jit(
-            lambda problem, state: engine.generation(problem, state)[0])
+            lambda problem, state: engine.generation(problem, state)[0],
+            donate_argnums=(1,))
         self._scan_jit = jax.jit(engine.run_scanned,
-                                 static_argnames="generations")
+                                 static_argnames="generations",
+                                 donate_argnums=(1,))
 
     # -- init ---------------------------------------------------------------
     def init_state(self) -> GAState:

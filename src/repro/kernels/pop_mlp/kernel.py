@@ -60,7 +60,7 @@ def _forward_block(genome, x, spec: GenomeSpec):
     return h
 
 
-def _kernel(genome_ref, x_ref, y_ref, rows_ref, om_ref, o_ref, *,
+def _kernel(genome_ref, x_ref, y_ref, rows_ref, samp_ref, om_ref, o_ref, *,
             spec: GenomeSpec, n_s: int, n_valid: int, bs: int, bp: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -71,8 +71,10 @@ def _kernel(genome_ref, x_ref, y_ref, rows_ref, om_ref, o_ref, *,
     row_start = pl.program_id(0) * bp
     start = pl.program_id(1) * bs
 
-    # dedup fast path: skip population blocks holding only duplicate rows
-    @pl.when(row_start < rows_ref[0, 0])
+    # dedup fast path: skip population blocks holding only duplicate rows;
+    # suite fast path: skip sample blocks holding only padded samples
+    # (label −1 — they could only ever add zero, so skipping is bit-exact)
+    @pl.when((row_start < rows_ref[0, 0]) & (start < samp_ref[0, 0]))
     def _compute():
         logits = _forward_block(genome_ref[...], x_ref[...], spec)
         # padded-topology output columns (om == 0) can never win the argmax
@@ -92,13 +94,17 @@ def _kernel(genome_ref, x_ref, y_ref, rows_ref, om_ref, o_ref, *,
 def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
                     *, spec: GenomeSpec, bp: int = 8, bs: int = 128,
                     interpret: bool = False,
-                    n_valid_rows=None, out_mask=None) -> jnp.ndarray:
+                    n_valid_rows=None, n_valid_samples=None,
+                    out_mask=None) -> jnp.ndarray:
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
 
     ``n_valid_rows`` (optional, traced int32): rows at or past it live in
-    skipped population blocks — see module docstring. ``out_mask``
-    ((n_out,), optional, traced): valid output columns of a padded-topology
-    chromosome; omitted means every column is valid."""
+    skipped population blocks — see module docstring. ``n_valid_samples``
+    (optional, traced int32): sample blocks at or past it hold only padded
+    samples and are skipped (bit-exact — padded labels are −1 and add
+    zero). ``out_mask`` ((n_out,), optional, traced): valid output columns
+    of a padded-topology chromosome; omitted means every column is
+    valid."""
     P, G = pop.shape
     S = x_int.shape[0]
     n_out = spec.topo.sizes[-1]
@@ -113,6 +119,8 @@ def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
     n_s = (S + pad_s) // bs
     rows = jnp.full((1, 1), P if n_valid_rows is None else n_valid_rows,
                     jnp.int32)
+    samp = jnp.full((1, 1), S if n_valid_samples is None else n_valid_samples,
+                    jnp.int32)
     om = (jnp.ones((1, n_out), jnp.int32) if out_mask is None
           else jnp.asarray(out_mask, jnp.int32).reshape(1, n_out))
     out = pl.pallas_call(
@@ -123,13 +131,14 @@ def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
             pl.BlockSpec((bp, G), lambda i, j: (i, 0)),
             pl.BlockSpec((bs, x_int.shape[1]), lambda i, j: (j, 0)),
             pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),    # 2-D for Mosaic
-            # valid-row scalar; plain (1, 1) block — SMEM memory_space breaks
-            # interpret mode on this jax version
+            # valid-row/valid-sample scalars; plain (1, 1) blocks — SMEM
+            # memory_space breaks interpret mode on this jax version
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((1, n_out), lambda i, j: (0, 0)),  # output-col mask
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((P + pad_p, 1), jnp.int32),
         interpret=interpret,
-    )(pop, x_int, labels[:, None], rows, om)
+    )(pop, x_int, labels[:, None], rows, samp, om)
     return out[:P, 0]

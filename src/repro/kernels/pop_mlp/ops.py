@@ -15,6 +15,12 @@ live in population tiles that are skipped outright ("ref", "kernel",
 "interpret") and have unspecified counts. The "jnp" oracle evaluates
 everything regardless.
 
+``n_valid_samples`` (traced int32) is the sample-axis twin: tiles of
+padded samples (suite batching pads every lane to the widest dataset;
+padded labels are −1 and contribute zero counts) are skipped outright on
+the tiled backends — bit-identical, the skipped tiles could only add
+zero. The "jnp" oracle evaluates them.
+
 ``out_mask`` ((n_out,), traced) marks the valid output columns of a
 padded-topology chromosome (suite batching): invalid columns are pinned to
 INT32_MIN before the argmax on every backend, so a padded genome predicts
@@ -33,7 +39,8 @@ BACKENDS = ("auto", "kernel", "interpret", "ref", "jnp")
 def population_correct(pop, x_int, labels, *, spec, backend=None,
                        use_kernel=None, interpret=None,
                        pop_tile: int = 64, sample_tile: int = 256,
-                       n_valid_rows=None, out_mask=None):
+                       n_valid_rows=None, n_valid_samples=None,
+                       out_mask=None):
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
 
     ``use_kernel``/``interpret`` are the legacy knobs (pre-dispatcher API)
@@ -50,12 +57,14 @@ def population_correct(pop, x_int, labels, *, spec, backend=None,
             bs=min(sample_tile, 128),
             interpret=(backend == "interpret" if interpret is None
                        else interpret),
-            n_valid_rows=n_valid_rows, out_mask=out_mask)
+            n_valid_rows=n_valid_rows, n_valid_samples=n_valid_samples,
+            out_mask=out_mask)
     if backend == "ref":
         return pop_mlp_correct_tiled(pop, x_int, labels, spec=spec,
                                      pop_tile=pop_tile,
                                      sample_tile=sample_tile,
                                      n_valid_rows=n_valid_rows,
+                                     n_valid_samples=n_valid_samples,
                                      out_mask=out_mask)
     if backend == "jnp":
         return pop_mlp_correct_ref(pop, x_int, labels, spec=spec,

@@ -26,7 +26,8 @@ def pop_mlp_correct_ref(pop, x_int, labels, *, spec: GenomeSpec,
 
 def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
                           pop_tile: int = 64, sample_tile: int = 256,
-                          n_valid_rows=None, out_mask=None):
+                          n_valid_rows=None, n_valid_samples=None,
+                          out_mask=None):
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts, tiled.
 
     The sample axis is processed in ``sample_tile`` chunks via ``lax.scan``
@@ -35,9 +36,19 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
     int32) is given, population tiles starting at or past it return zeros
     through ``lax.cond`` without running the forward pass — rows ≥
     ``n_valid_rows`` therefore have unspecified counts. Rows <
-    ``n_valid_rows`` are always bit-exact w.r.t. the oracle. ``out_mask``
-    ((n_out,), optional, traced) marks the valid output columns of a
-    padded-topology chromosome — see ``repro.core.mlp.mask_logits``.
+    ``n_valid_rows`` are always bit-exact w.r.t. the oracle.
+
+    ``n_valid_samples`` (traced int32, optional) skips sample tiles the
+    same way: tiles starting at or past it hold only padded samples
+    (label −1, zero contribution), so replacing them with zeros through
+    ``lax.cond`` is *bit-identical* — this is what makes a suite lane
+    cost its own dataset's samples instead of the padded axis. The bound
+    must be unbatched (callers pmax it over any whole-run batch axis) or
+    vmap degrades the cond to a both-branches select.
+
+    ``out_mask`` ((n_out,), optional, traced) marks the valid output
+    columns of a padded-topology chromosome — see
+    ``repro.core.mlp.mask_logits``.
     """
     P, G = pop.shape
     S, n_in = x_int.shape
@@ -50,6 +61,7 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
         labels = jnp.pad(labels, (0, pad_s), constant_values=-1)
     x_c = x_int.reshape(-1, st, n_in)
     y_c = labels.reshape(-1, st)
+    s_starts = jnp.arange(x_c.shape[0], dtype=jnp.int32) * st
 
     pad_p = (pt - P % pt) % pt
     if pad_p:
@@ -57,12 +69,23 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
     tiles = pop.reshape(-1, pt, G)
 
     def eval_tile(rows):
-        def body(acc, xy):
+        def tile_counts(xy):
             xb, yb = xy
-            return acc + population_correct_counts(spec, rows, xb, yb,
-                                                   out_mask=out_mask), None
+            return population_correct_counts(spec, rows, xb, yb,
+                                             out_mask=out_mask)
 
-        acc, _ = lax.scan(body, jnp.zeros((pt,), jnp.int32), (x_c, y_c))
+        def body(acc, xys):
+            xb, yb, start_s = xys
+            if n_valid_samples is None:
+                c = tile_counts((xb, yb))
+            else:
+                c = lax.cond(start_s < n_valid_samples, tile_counts,
+                             lambda xy: jnp.zeros((pt,), jnp.int32),
+                             (xb, yb))
+            return acc + c, None
+
+        acc, _ = lax.scan(body, jnp.zeros((pt,), jnp.int32),
+                          (x_c, y_c, s_starts))
         return acc
 
     if n_valid_rows is None:

@@ -1,0 +1,3 @@
+from .ops import population_variation, BACKENDS
+from .kernel import pop_variation_kernel
+from .ref import pop_variation_ref

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused GA variation (crossover → mutation → clip).
+
+One grid step produces a (bp, G) block of children from tournament-gathered
+parent blocks, generating every gene-shaped uniform *inside* the kernel
+with the counter-based Threefry-2x32 of ``repro.core.genome`` — the same
+20-round math, element (slot, gene, row) addressed by
+``(slot_key, ids[j], row >> 1)`` with the two output words serving the
+row pair. No (slots, P, G) uniform tensor ever round-trips through HBM:
+draws, crossover selects, mutation and clipping all happen in VMEM on the
+VPU (int32/uint32 bit ops + a float compare).
+
+This is one backend behind the ``population_variation`` dispatcher
+(ops.py): ``kernel`` compiled on TPU, ``interpret`` for structural
+validation on CPU; ``ref``/``ops`` are the jnp paths. All backends are
+bit-identical: the kernel evaluates the identical hash at the identical
+counters, so children match ``pop_variation_ref`` and the chained
+operators exactly.
+
+Operand layout: the dispatcher pre-gathers parents into the child frame —
+``a_rows[p]`` is child ``p``'s no-swap source and ``b_rows[p]`` its swap
+source (row ``p`` of the first-half children reads pair ``p``, row
+``P/2 + p`` the same pair with the roles flipped) — and pre-folds the
+three draw-slot keys (``genome._slot_keys``) into a (3, 2) uint32 operand. The
+crossover swap draw belongs to the *pair*, so its counter row is
+``p mod P/2`` while the mutation slots use ``p`` — exactly the addressing
+of the fused jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.genome import threefry2x32, bits_to_open01
+
+
+def _slot_uniform(k1, k2, gid, row):
+    """The canonical gene-addressed uniform at (slot key, gene id, row)."""
+    y1, y2 = threefry2x32(k1, k2, gid, (row >> 1).astype(jnp.uint32))
+    bits = jnp.where(row % 2 == 1, y2, y1)
+    return bits_to_open01(bits)
+
+
+def _kernel(a_ref, b_ref, do_ref, low_ref, high_ref, ismask_ref, bits_ref,
+            ids_ref, keys_ref, pm_ref, o_ref, *, bp: int, half: int):
+    rows = (pl.program_id(0) * bp
+            + jax.lax.broadcasted_iota(jnp.int32, a_ref.shape, 0))
+    gid = jnp.broadcast_to(ids_ref[...], a_ref.shape).astype(jnp.uint32)
+
+    # crossover: the swap draw is addressed by the parent *pair* index
+    pair = rows % half
+    u_swap = _slot_uniform(keys_ref[0, 0], keys_ref[0, 1], gid, pair)
+    swap = (do_ref[...] > 0) & (u_swap < 0.5)
+    child = jnp.where(swap, b_ref[...], a_ref[...])
+
+    # mutation: the do gate + ONE value draw (flipped-bit position on mask
+    # genes, reset value elsewhere) at the child row
+    u_do = _slot_uniform(keys_ref[1, 0], keys_ref[1, 1], gid, rows)
+    u_val = _slot_uniform(keys_ref[2, 0], keys_ref[2, 1], gid, rows)
+
+    mask_bits = bits_ref[...]
+    bitpos = jnp.floor(u_val * jnp.maximum(mask_bits, 1)).astype(jnp.int32)
+    flipped = jnp.bitwise_xor(child, jnp.left_shift(1, bitpos))
+    lo = low_ref[...]
+    hi = high_ref[...]
+    reset = jnp.floor(lo.astype(jnp.float32)
+                      + u_val * (hi - lo).astype(jnp.float32)
+                      ).astype(jnp.int32)
+    mutated = jnp.where(ismask_ref[...] > 0, flipped, reset)
+    child = jnp.where(u_do < pm_ref[0, 0], mutated, child)
+    o_ref[...] = jnp.clip(child, lo, hi - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def pop_variation_kernel(a_rows, b_rows, do_rows, table_low, table_high,
+                         table_is_mask, table_mask_bits, table_ids,
+                         slot_keys, pm_gene, *, bp: int = 64,
+                         interpret: bool = False):
+    """(P, G) children from pre-gathered parent frames — see module doc.
+
+    a_rows/b_rows: (P, G) int32 no-swap / swap sources per child row.
+    do_rows: (P,) bool/int32 per-child do-crossover gate.
+    table_*: the GeneTable leaves, (G,) each.
+    slot_keys: (3, 2) uint32 — ``genome._slot_keys`` of the gene-draw key
+        over the variation slots (swap, mutation gate, mutation value).
+    pm_gene: () float32 per-gene mutation probability (traced).
+    """
+    P, G = a_rows.shape
+    half = P // 2
+    bp = min(bp, P)
+    pad_p = (bp - P % bp) % bp
+    if pad_p:                     # padded rows compute garbage; sliced off
+        a_rows = jnp.pad(a_rows, ((0, pad_p), (0, 0)))
+        b_rows = jnp.pad(b_rows, ((0, pad_p), (0, 0)))
+        do_rows = jnp.pad(do_rows.astype(jnp.int32), (0, pad_p))
+    row2d = lambda arr: jnp.asarray(arr, jnp.int32).reshape(-1, 1)
+    gene2d = lambda arr, dt: jnp.asarray(arr, dt).reshape(1, G)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bp=bp, half=half),
+        grid=((P + pad_p) // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, G), lambda i: (i, 0)),
+            pl.BlockSpec((bp, G), lambda i: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),       # do-crossover gate
+            pl.BlockSpec((1, G), lambda i: (0, 0)),        # low
+            pl.BlockSpec((1, G), lambda i: (0, 0)),        # high
+            pl.BlockSpec((1, G), lambda i: (0, 0)),        # is_mask
+            pl.BlockSpec((1, G), lambda i: (0, 0)),        # mask_bits
+            pl.BlockSpec((1, G), lambda i: (0, 0)),        # draw ids
+            pl.BlockSpec((3, 2), lambda i: (0, 0)),        # slot keys
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # pm_gene
+        ],
+        out_specs=pl.BlockSpec((bp, G), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P + pad_p, G), jnp.int32),
+        interpret=interpret,
+    )(a_rows, b_rows, row2d(do_rows), gene2d(table_low, jnp.int32),
+      gene2d(table_high, jnp.int32), gene2d(table_is_mask, jnp.int32),
+      gene2d(table_mask_bits, jnp.int32), gene2d(table_ids, jnp.uint32),
+      jnp.asarray(slot_keys, jnp.uint32),
+      jnp.asarray(pm_gene, jnp.float32).reshape(1, 1))
+    return out[:P]

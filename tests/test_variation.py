@@ -1,0 +1,83 @@
+"""Property tests for the counter-based gene RNG (hypothesis).
+
+The load-bearing contract (genome.py "Counter-based gene RNG"): a
+gene-shaped uniform depends only on (key, slot, gene id, row) — never on
+the gene-axis length or the number of rows drawn. Deterministic
+equivalence tests for the fused variation dispatcher live in
+tests/test_variation_path.py (no hypothesis needed there).
+"""
+import numpy as np
+import pytest
+import jax
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import (MLPTopology, GenomeSpec, gene_uniform,
+                               max_topology, padded_table, threefry2x32)
+
+
+SPEC = GenomeSpec(MLPTopology((10, 3, 2)))
+KEY = jax.random.PRNGKey(0)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_threefry_matches_jax_fold_in(seed, data):
+    """Our vectorised Threefry-2x32 is bit-identical to jax.random's:
+    ``fold_in(key, d)`` is Threefry at counter (0, d)."""
+    key = jax.random.PRNGKey(seed)
+    ours = np.stack(jax.tree_util.tree_map(
+        np.asarray, threefry2x32(key[0], key[1], np.uint32(0),
+                                 np.uint32(data))))
+    np.testing.assert_array_equal(ours, np.asarray(jax.random.fold_in(key,
+                                                                      data)))
+
+
+@given(st.integers(1, 40), st.integers(0, 3), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_gene_axis_length_independence(n_keep, slot, seed):
+    """Dropping genes from the axis never changes the survivors' draws:
+    draw (i, j) is a function of ids[j], not of j or the axis length."""
+    key = jax.random.PRNGKey(seed)
+    ids = SPEC.gene_ids
+    full = np.asarray(gene_uniform(key, ids, 8, slot=slot))
+    keep = np.linspace(0, ids.shape[0] - 1, n_keep).astype(np.int32)
+    sub = np.asarray(gene_uniform(key, ids[keep], 8, slot=slot))
+    np.testing.assert_array_equal(sub, full[:, keep])
+
+
+@given(st.integers(1, 33), st.integers(1, 33), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_row_count_independence(n1, n2, slot):
+    """Row i's draw is identical whatever n was requested (both Threefry
+    output words of a row pair are position-addressed)."""
+    u1 = np.asarray(gene_uniform(KEY, SPEC.gene_ids, n1, slot=slot))
+    u2 = np.asarray(gene_uniform(KEY, SPEC.gene_ids, n2, slot=slot))
+    m = min(n1, n2)
+    np.testing.assert_array_equal(u1[:m], u2[:m])
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_padded_draws_equal_unpadded_per_shared_id(seed):
+    """A padded layout reuses the inner ids at the embedded positions, so
+    its valid genes draw the very numbers the unpadded layout draws."""
+    key = jax.random.PRNGKey(seed)
+    spec_pad = GenomeSpec(max_topology([SPEC.topo, MLPTopology((14, 5, 4))]))
+    table = padded_table(SPEC, spec_pad)
+    u_pad = np.asarray(gene_uniform(key, table.ids, 6))
+    u_in = np.asarray(gene_uniform(key, SPEC.gene_ids, 6))
+    np.testing.assert_array_equal(u_pad[:, np.asarray(table.valid)], u_in)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 16))
+@settings(max_examples=10, deadline=None)
+def test_slot_disjointness(seed, n):
+    """Different slots of one key never alias: the slot matrices are
+    pairwise distinct (same ids, same rows)."""
+    key = jax.random.PRNGKey(seed)
+    us = [np.asarray(gene_uniform(key, SPEC.gene_ids, n, slot=s))
+          for s in range(4)]
+    for a in range(len(us)):
+        for b in range(a + 1, len(us)):
+            assert (us[a] != us[b]).mean() > 0.99, f"slots {a}/{b} alias"

@@ -1,0 +1,149 @@
+"""Fused variation dispatcher: backend equivalence + donation (no
+hypothesis — these are deterministic bit-identity checks; the RNG
+property tests live in tests/test_variation.py).
+
+Every backend of ``kernels.pop_variation.population_variation`` (fused
+ref, Pallas interpret, chained legacy operators) must produce
+bit-identical children — standalone, through whole ``GATrainer`` runs,
+dedup on and off — and the donated step/scan dispatches must only alias
+buffers, never change values.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import GAConfig, GATrainer, engine
+from repro.core.genome import (MLPTopology, GenomeSpec, N_VARIATION_SLOTS,
+                               gene_uniform, gene_uniform_slots,
+                               max_topology, padded_table, random_population)
+from repro.core.operators import make_offspring
+from repro.kernels.pop_variation import population_variation
+
+
+SPEC = GenomeSpec(MLPTopology((10, 3, 2)))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_gene_uniform_slots_matches_per_slot_draws():
+    """The fused multi-slot pass is bit-identical to per-slot draws, for
+    int and sequence slot specs, odd and even row counts."""
+    for n in (1, 7, 16):
+        fused = np.asarray(gene_uniform_slots(KEY, SPEC.gene_ids, n,
+                                              N_VARIATION_SLOTS))
+        for s in range(N_VARIATION_SLOTS):
+            np.testing.assert_array_equal(
+                fused[s], np.asarray(gene_uniform(KEY, SPEC.gene_ids, n,
+                                                  slot=s)))
+        picked = np.asarray(gene_uniform_slots(KEY, SPEC.gene_ids, n, (2, 0)))
+        np.testing.assert_array_equal(picked[0], fused[2])
+        np.testing.assert_array_equal(picked[1], fused[0])
+
+
+def test_draws_are_uniform_01():
+    u = np.asarray(gene_uniform(KEY, SPEC.gene_ids, 512))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+
+
+def _ranked_pop(n=32):
+    pop = random_population(KEY, SPEC.table(), n)
+    rank = jnp.zeros(n, jnp.int32)
+    crowd = jnp.ones(n, jnp.float32)
+    return pop, rank, crowd
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_variation_backends_match_operator_chain(backend):
+    """Oracle equivalence: the fused dispatcher backends reproduce the
+    chained make_offspring bit for bit at the same key."""
+    pop, rank, crowd = _ranked_pop()
+    kw = dict(genes=SPEC.table(), pc=jnp.float32(0.7), pm=jnp.float32(0.3))
+    oracle = make_offspring(jax.random.PRNGKey(5), pop, rank, crowd,
+                            SPEC.table(), jnp.float32(0.7), jnp.float32(0.3))
+    out = population_variation(jax.random.PRNGKey(5), pop, rank, crowd,
+                               backend=backend, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_variation_kernel_tiles_and_padding():
+    """The Pallas path is tile-size independent (incl. a non-dividing
+    pop_tile) and equals the ref path."""
+    pop, rank, crowd = _ranked_pop(n=24)
+    kw = dict(genes=SPEC.table(), pc=jnp.float32(0.9), pm=jnp.float32(0.5))
+    ref = population_variation(jax.random.PRNGKey(2), pop, rank, crowd,
+                               backend="ref", **kw)
+    for tile in (5, 8, 64):
+        out = population_variation(jax.random.PRNGKey(2), pop, rank, crowd,
+                                   backend="interpret", pop_tile=tile, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=f"pop_tile={tile}")
+
+
+def test_variation_rejects_unknown_backend_and_odd_pop():
+    pop, rank, crowd = _ranked_pop()
+    kw = dict(genes=SPEC.table(), pc=0.7, pm=0.3)
+    with pytest.raises(ValueError, match="unknown variation backend"):
+        population_variation(KEY, pop, rank, crowd, backend="bogus", **kw)
+    with pytest.raises(ValueError, match="even population"):
+        population_variation(KEY, pop[:31], rank[:31], crowd[:31],
+                             backend="ref", **kw)
+
+
+def test_variation_never_perturbs_padding():
+    """Canonical-zero rule through the fused path: padding genes of a
+    padded table stay exactly zero on every backend."""
+    spec_pad = GenomeSpec(max_topology([SPEC.topo, MLPTopology((14, 5, 4))]))
+    table = padded_table(SPEC, spec_pad)
+    pop = random_population(KEY, table, 16)
+    rank = jnp.zeros(16, jnp.int32)
+    crowd = jnp.ones(16, jnp.float32)
+    invalid = ~np.asarray(table.valid)
+    for backend in ("ref", "interpret", "ops"):
+        out = population_variation(jax.random.PRNGKey(3), pop, rank, crowd,
+                                   genes=table, pc=jnp.float32(0.9),
+                                   pm=jnp.float32(0.5), backend=backend)
+        assert np.asarray(out)[:, invalid].sum() == 0, backend
+
+
+@pytest.mark.parametrize("dedup", [True, False])
+def test_trainer_runs_identical_across_variation_backends(bc_dataset, dedup):
+    """Whole scanned GATrainer runs are bit-identical between the fused
+    dispatcher and the legacy operator chain, dedup on and off."""
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    states = {}
+    for backend in ("ref", "ops"):
+        cfg = GAConfig(pop_size=16, generations=4, dedup=dedup,
+                       variation_backend=backend)
+        tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
+        states[backend], _ = tr.run()
+    for f in ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(states["ref"], f)),
+            np.asarray(getattr(states["ops"], f)),
+            err_msg=f"dedup={dedup}: GAState.{f} differs between "
+                    "variation backends")
+
+
+def test_donated_scan_matches_undonated(bc_dataset):
+    """The trainer's donated step/scan dispatches only alias buffers: the
+    run equals the same jitted computation with no donation anywhere."""
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+    cfg = GAConfig(pop_size=16, generations=3)
+    tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)   # donated path
+    donated, _ = tr.run()
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    state, _ = jax.jit(lambda p: engine.init_state(
+        p, jax.random.PRNGKey(p.cfg.seed), None))(problem)
+    plain, _ = jax.jit(engine.run_scanned, static_argnames="generations")(
+        problem, state, generations=cfg.generations)
+    for f in ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(donated, f)), np.asarray(getattr(plain, f)),
+            err_msg=f"donation changed GAState.{f}")
+    # scan=False exercises repeated donated step dispatches
+    stepped, _ = GATrainer(topo, ds.x_train, ds.y_train, cfg).run(scan=False)
+    np.testing.assert_array_equal(np.asarray(stepped.pop),
+                                  np.asarray(donated.pop))
