@@ -33,10 +33,19 @@ import sys
 GATED_SPEEDUPS = (
     "trainer_dedup_on_speedup_vs_seed",
     "variation_speedup_vs_seed",
+    "generation_fused_speedup",
     "batched_seeds_speedup_vs_sequential",
     "swept_configs_speedup_vs_sequential",
     "suite_speedup_vs_sequential",
 )
+
+# Absolute floors on top of the relative gate: these targets must hold no
+# matter what the committed baseline says (they are within-process ratios,
+# so runner speed cancels out). The trainer target is the cross-generation
+# EvalCache acceptance bar on the converged-population workload.
+ABSOLUTE_FLOORS = {
+    "trainer_dedup_on_speedup_vs_seed": 6.0,
+}
 
 
 def check(baseline: dict, fresh: dict, max_regression: float):
@@ -48,6 +57,12 @@ def check(baseline: dict, fresh: dict, max_regression: float):
             lines.append(f"FAIL {key}: not measured by this run")
             continue
         new = float(fresh[key])
+        if key in ABSOLUTE_FLOORS and new < ABSOLUTE_FLOORS[key]:
+            floor = ABSOLUTE_FLOORS[key]
+            lines.append(f"FAIL {key}: {new:.2f}x < absolute floor "
+                         f"{floor:.2f}x")
+            failures.append(f"{key}: {new:.2f}x < absolute {floor:.2f}x")
+            continue
         if key not in baseline:
             lines.append(f"PASS {key}: {new:.2f}x (no committed baseline yet)")
             continue

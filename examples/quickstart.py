@@ -42,10 +42,18 @@ def main():
           f"area={base.area_cm2:.2f}cm² power={base.power_mw:.1f}mW")
 
     seeds = calibrated_seeds(spec, fm, ds.x_train)
+    # dedup defaults to the cross-generation EvalCache: re-discovered
+    # chromosomes skip evaluation across the whole run (bit-identical
+    # results either way). Knobs: dedup=True|"cache"|"legacy"|False,
+    # cache_slots (table size, default 4096, rounded to a power of two),
+    # cache_probes (probe depth), generation_backend ("auto" fuses the
+    # whole generation: Pallas megakernel on TPU, fused jnp elsewhere).
     trainer = GATrainer(topo, ds.x_train, ds.y_train,
                         GAConfig(pop_size=64, generations=60),
                         baseline_acc=bb.accuracy, doping_seeds=seeds)
     state, hist = trainer.run(verbose=True)
+    print(f"unique rows evaluated: {trainer.unique_evals}, "
+          f"cross-generation cache hits: {trainer.cache_hits}")
     front = trainer.front(state)
     print(f"Pareto front ({len(front['objectives'])} points):")
     for err, fa in front["objectives"][:8]:

@@ -18,7 +18,12 @@ redundant work while staying jit/scan/shard_map compatible:
 
 ``dedup_eval`` additionally reuses *known* values (e.g. the parent
 population's objectives carried in ``GAState``), so a (μ+λ) generation only
-scores children that are genuinely new.
+scores children that are genuinely new — and, given an :class:`EvalCache`,
+values remembered from *earlier* generations: the cache is a fixed-size
+open-addressing hash table (chromosome row → int32 correct count) that
+rides in ``GAState`` through the ``lax.scan`` carry, so re-discovered
+genomes (crossover products of a converged front, low-mutation copies)
+skip evaluation across the whole run, not just within one generation.
 
 Host-side (numpy) searches use :func:`unique_rows` — the same
 dedup-then-scatter contract for sequential per-genome evaluation loops
@@ -26,22 +31,136 @@ dedup-then-scatter contract for sequential per-genome evaluation loops
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def hash_rows(rows: jnp.ndarray):
+def hash_rows(rows: jnp.ndarray, ids=None):
     """(N, G) int32 → two (N,) uint32 multiplicative hashes.
 
     Used only to group candidate duplicates; callers must confirm equality
     on the actual rows (``dedup_eval`` does).
+
+    ``ids`` (optional (G,) int): per-gene coefficient indices — pass the
+    GeneTable draw ids so a padded-canonical layout hashes exactly like
+    its unpadded original (padding genes are pinned to zero and contribute
+    nothing; embedded genes keep their inner position's coefficient).
+    Position-indexed coefficients (the default) equal the id-indexed ones
+    for unpadded specs, where ids == arange(G).
     """
     x = rows.astype(jnp.uint32)
-    g = jnp.arange(x.shape[1], dtype=jnp.uint32)
+    g = (jnp.arange(x.shape[1], dtype=jnp.uint32) if ids is None
+         else jnp.asarray(ids).astype(jnp.uint32))
     c1 = (g * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B9)) | jnp.uint32(1)
     c2 = (g * jnp.uint32(40503) + jnp.uint32(0x85EBCA6B)) | jnp.uint32(1)
     return jnp.sum(x * c1, axis=1), jnp.sum(x * c2, axis=1)
+
+
+# -- cross-generation evaluation cache ---------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EvalCache:
+    """Fixed-size open-addressing chromosome → correct-count table.
+
+    ``rows`` (C, G) int32 holds the *keyed* (padding-masked) chromosome of
+    each slot, ``vals`` (C,) int32 its cached integer correct count, and
+    ``stamp`` (C,) int32 the generation that last proved the entry useful
+    (−1 marks an empty slot). ``probes`` (static aux) is the double-hash
+    probe depth: a row's candidate slots are
+    ``(h1 + i · (h2 | 1)) mod C`` for ``i < probes`` (C is a power of two).
+
+    Lookups confirm by exact row compare, so a hash collision costs a
+    redundant evaluation, never a wrong count. Inserts overwrite the
+    lowest-stamped probe slot (empty first, then oldest — generation-
+    stamped LRU within the probe window); when several new rows of one
+    batch target the same slot, the lowest batch index wins and the rest
+    are dropped (deterministic under jit/vmap — again only ever costing a
+    future redundant eval). Every array op is a gather/scatter with a
+    static probe width, so the table vmaps per lane (``run_batch``/
+    ``run_grid``/``run_suite`` carry one independent slice per cell) and
+    lives in a donated ``lax.scan`` carry without reallocation.
+    """
+    rows: jnp.ndarray    # (C, G) int32 keyed rows
+    vals: jnp.ndarray    # (C,) int32 correct counts
+    stamp: jnp.ndarray   # (C,) int32 last-useful generation; −1 = empty
+    probes: int = 4
+
+    def tree_flatten(self):
+        return (self.rows, self.vals, self.stamp), self.probes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux)
+
+    @property
+    def capacity(self) -> int:
+        return self.vals.shape[0]
+
+
+def cache_init(capacity: int, n_genes: int, probes: int = 4) -> EvalCache:
+    """Empty cache; ``capacity`` is rounded up to a power of two."""
+    cap = 1 << max(1, int(capacity) - 1).bit_length()
+    return EvalCache(jnp.zeros((cap, n_genes), jnp.int32),
+                     jnp.zeros((cap,), jnp.int32),
+                     jnp.full((cap,), -1, jnp.int32), probes)
+
+
+def _probe_slots(cache: EvalCache, h1, h2):
+    """(N,) hash pair → (N, probes) int32 candidate slot indices."""
+    offs = jnp.arange(cache.probes, dtype=jnp.uint32)
+    raw = h1[:, None] + offs[None, :] * (h2 | jnp.uint32(1))[:, None]
+    return (raw & jnp.uint32(cache.capacity - 1)).astype(jnp.int32)
+
+
+def cache_lookup(cache: EvalCache, keyed_rows, h1, h2):
+    """Probe for each keyed row; returns (hit, vals, slot) each (N,).
+
+    ``vals``/``slot`` are meaningful only where ``hit``; misses report
+    probe 0's slot (harmless — callers gate on ``hit``).
+    """
+    slots = _probe_slots(cache, h1, h2)
+    live = cache.stamp[slots] >= 0
+    match = live & jnp.all(cache.rows[slots] == keyed_rows[:, None, :],
+                           axis=-1)
+    hit = jnp.any(match, axis=1)
+    first = jnp.argmax(match, axis=1)
+    slot = jnp.take_along_axis(slots, first[:, None], axis=1)[:, 0]
+    return hit, cache.vals[slot], slot
+
+
+def cache_update(cache: EvalCache, keyed_rows, vals, insert, restamp,
+                 hit_slot, h1, h2, gen) -> EvalCache:
+    """Re-stamp useful hits and insert newly evaluated rows.
+
+    insert / restamp: (N,) bool — disjoint by construction (a row either
+    hit the cache or was evaluated). ``gen`` is the stamp for both. All
+    scatters resolve duplicate targets deterministically: re-stamps write
+    one identical value, and inserts racing for one slot keep the lowest
+    row index (scatter-min winner pass) and drop the rest.
+    """
+    C = cache.capacity                       # index C == drop (out of range)
+    gen = jnp.int32(gen)
+    rs = jnp.where(restamp, hit_slot, C)
+    stamp = cache.stamp.at[rs].max(jnp.full_like(rs, gen), mode="drop")
+
+    # insert target: the lowest-stamped probe slot *after* re-stamping, so
+    # a slot just proven useful is not evicted unless every probe was
+    slots = _probe_slots(cache, h1, h2)
+    oldest = jnp.argmin(stamp[slots], axis=1)
+    tgt = jnp.take_along_axis(slots, oldest[:, None], axis=1)[:, 0]
+    n = keyed_rows.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    winner = jnp.full((C,), n, jnp.int32).at[tgt].min(
+        jnp.where(insert, idx, n))
+    w = jnp.where(insert & (winner[tgt] == idx), tgt, C)
+    return EvalCache(cache.rows.at[w].set(keyed_rows, mode="drop"),
+                     cache.vals.at[w].set(vals, mode="drop"),
+                     stamp.at[w].set(jnp.full_like(w, gen), mode="drop"),
+                     cache.probes)
 
 
 def _broadcast(cond, leaf):
@@ -49,7 +168,8 @@ def _broadcast(cond, leaf):
 
 
 def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
-               gene_mask=None):
+               gene_mask=None, cache: EvalCache | None = None, gen=None,
+               ids=None):
     """Evaluate ``rows`` with duplicate suppression; returns per-row values.
 
     eval_fn(batch, n_valid) → pytree of arrays with leading axis len(batch);
@@ -75,15 +195,28 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
         operators pin padding to zero, which makes masked and unmasked
         grouping agree — this is defense in depth, not a semantic change —
         and ``eval_fn`` always sees the actual (padded) rows.
+    cache: optional :class:`EvalCache` remembering values from earlier
+        calls (the cross-generation fast path). Requires ``eval_fn`` to
+        return a single (N,) array (the engine's int32 correct counts).
+        Group leaders that are neither known nor cached are evaluated;
+        cached leaders reuse the table value; newly evaluated leaders are
+        inserted with stamp ``gen`` and useful hits are re-stamped.
+    gen: int32 generation stamp for cache inserts/re-stamps (cache mode).
+    ids: per-gene hash-coefficient indices (see :func:`hash_rows`) — pass
+        the GeneTable draw ids so padded suite lanes probe, insert and
+        evict exactly like their unpadded sequential runs.
 
-    Returns ``(values, n_eval)``: values is a pytree matching ``eval_fn``'s
-    output with leading axis N, in the original row order; n_eval is the
-    number of rows this problem actually needed (int32 scalar — the
-    per-problem count even when ``axis_name`` shares the evaluation bound).
+    Returns ``(values, n_eval)`` — or, in cache mode,
+    ``(values, n_eval, n_hit, new_cache)``: values is a pytree matching
+    ``eval_fn``'s output with leading axis N, in the original row order;
+    n_eval is the number of rows this problem actually evaluated and
+    n_hit the number it reused from the cache (both int32 scalars — the
+    per-problem counts even when ``axis_name`` shares the evaluation
+    bound).
     """
     N = rows.shape[0]
     keyed = rows if gene_mask is None else jnp.where(gene_mask, rows, 0)
-    h1, h2 = hash_rows(keyed)
+    h1, h2 = hash_rows(keyed, ids)
     order = jnp.lexsort((h2, h1))
     sp = keyed[order]
     first = jnp.concatenate([jnp.ones((1,), bool),
@@ -102,6 +235,15 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
     else:
         needs = first
 
+    if cache is not None:
+        # identical rows share identical probes, so hit/cval are constant
+        # within a group — no leader broadcast needed
+        hs1, hs2 = h1[order], h2[order]
+        hit, cval, cslot = cache_lookup(cache, sp, hs1, hs2)
+        useful = needs & hit               # leaders saved from evaluation
+        needs = needs & ~hit
+        n_hit = jnp.sum(useful.astype(jnp.int32))
+
     pack = jnp.argsort(~needs)             # stable: rows needing eval first
     n_eval = jnp.sum(needs.astype(jnp.int32))
     n_valid = n_eval if axis_name is None else jax.lax.pmax(n_eval, axis_name)
@@ -113,6 +255,8 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
 
     def unscatter(ev_leaf, known_leaf=None):
         val = ev_leaf[jnp.clip(grp_slot[uid], 0, None)]
+        if cache is not None:
+            val = jnp.where(_broadcast(hit, val), cval, val)
         if known_leaf is not None:
             reuse = grp_known[uid] == 1
             val = jnp.where(_broadcast(reuse, val),
@@ -123,7 +267,16 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
         out = jax.tree_util.tree_map(unscatter, evaluated)
     else:
         out = jax.tree_util.tree_map(unscatter, evaluated, known)
-    return out, n_eval
+    if cache is None:
+        return out, n_eval
+
+    ev = jax.tree_util.tree_leaves(evaluated)
+    if len(ev) != 1:
+        raise ValueError("cache mode needs a single-array eval_fn output")
+    ins_val = ev[0][jnp.clip(slot, 0, None)]
+    new_cache = cache_update(cache, sp, ins_val, needs, useful, cslot,
+                             hs1, hs2, jnp.int32(0) if gen is None else gen)
+    return out, n_eval, n_hit, new_cache
 
 
 def unique_rows(rows: np.ndarray):

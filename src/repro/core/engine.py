@@ -41,12 +41,10 @@ from .genome import GeneTable, GenomeSpec, MLPTopology, random_population
 from .quantize import quantize_inputs
 from .mlp import population_accuracy
 from .area import population_area
-from .dedup import dedup_eval
-from .nsga2 import (dominance_matrix, evaluate_ranking, ranking_from_dom,
-                    subset_ranking, survivor_select)
+from .dedup import EvalCache, cache_init, dedup_eval
+from .nsga2 import evaluate_ranking
 from .pareto import pareto_front
 from ..kernels.pop_mlp import population_correct
-from ..kernels.pop_variation import population_variation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,11 +63,21 @@ class GAConfig:
     # variation hot path: auto|kernel|interpret|ref|ops — all bit-identical
     # (kernels.pop_variation; "ops" is the chained legacy operator oracle)
     variation_backend: str = "auto"
+    # generation step: auto|kernel|interpret|ref|phases — "kernel" fuses
+    # variation + fitness into one Pallas dispatch (kernels.pop_generation),
+    # "ref" is the fused jnp path with the cross-generation cache (the CPU
+    # fast path), "phases" the per-phase oracle chain. All bit-identical.
+    generation_backend: str = "auto"
     # population tile — shared by the fitness "ref" backend and the
     # variation Pallas kernel (one knob tiles both hot paths)
     pop_tile: int = 64
     sample_tile: int = 256           # sample tile ("ref" backend)
-    dedup: bool = True               # duplicate-chromosome eval caching
+    # duplicate-chromosome eval caching: True/"cache" carries a cross-
+    # generation EvalCache in GAState (the default), "legacy" dedups
+    # within one generation only, False evaluates everything
+    dedup: bool | str = True
+    cache_slots: int = 4096          # EvalCache capacity (rounded to 2^k)
+    cache_probes: int = 4            # open-addressing probe depth
     scan: bool = True                # lax.scan over generations (one dispatch)
     # internal: name of the enclosing vmap/shard_map axis batching whole
     # runs. Set by run_batch/sweep.run_grid so the dedup tile-skip stays a
@@ -91,10 +99,11 @@ class GAState:
     #                         of truth for selection)
     key: jnp.ndarray
     gen: jnp.ndarray
+    cache: EvalCache | None = None   # cross-generation eval cache (or None)
 
     def tree_flatten(self):
         return (self.pop, self.obj, self.viol, self.rank, self.crowd,
-                self.counts, self.key, self.gen), None
+                self.counts, self.key, self.gen, self.cache), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -195,9 +204,22 @@ class Problem:
                    spec, cfg)
 
 
+def dedup_mode(cfg: GAConfig) -> str:
+    """Resolve ``cfg.dedup`` to "off" | "legacy" | "cache".
+
+    The "jnp" fitness oracle has no n_valid_rows tile skip — dedup buys
+    nothing there, so it is forced off. ``True`` (the default) means the
+    cross-generation cached path; ``"legacy"`` keeps the within-generation
+    dedup of earlier revisions; ``False`` evaluates everything.
+    """
+    if not cfg.dedup or cfg.fitness_backend == "jnp":
+        return "off"
+    return "legacy" if cfg.dedup == "legacy" else "cache"
+
+
 def use_dedup(cfg: GAConfig) -> bool:
-    """The "jnp" oracle has no n_valid_rows tile skip — dedup buys nothing."""
-    return cfg.dedup and cfg.fitness_backend != "jnp"
+    """Whether any dedup (legacy or cached) is active."""
+    return dedup_mode(cfg) != "off"
 
 
 def pad_problem(problem: Problem, spec_pad: GenomeSpec,
@@ -329,13 +351,22 @@ def initial_population(problem: Problem, key, doping_seeds=None,
     return pop
 
 
-def initial_counts(problem: Problem, pop):
+def initial_counts(problem: Problem, pop, cache: EvalCache | None = None):
     """Integer correct counts (+ rows actually evaluated) for an initial
-    population; doping replicates seeds, so dedup scores them once."""
+    population; doping replicates seeds, so dedup scores them once. With a
+    ``cache`` (the cross-generation path) the initial unique rows are also
+    inserted (stamp 0) and ``(counts, n_eval, cache)`` is returned."""
+    eval_fn = lambda rows, n: population_counts(problem, rows, n)
+    if cache is not None:
+        counts, n_eval, _, cache = dedup_eval(
+            eval_fn, pop, axis_name=problem.cfg.batch_axis,
+            gene_mask=problem.genes.valid, cache=cache, gen=jnp.int32(0),
+            ids=problem.genes.ids)
+        return counts, n_eval, cache
     if use_dedup(problem.cfg):
-        return dedup_eval(lambda rows, n: population_counts(problem, rows, n),
-                          pop, axis_name=problem.cfg.batch_axis,
-                          gene_mask=problem.genes.valid)
+        return dedup_eval(eval_fn, pop, axis_name=problem.cfg.batch_axis,
+                          gene_mask=problem.genes.valid,
+                          ids=problem.genes.ids)
     return population_counts(problem, pop), jnp.int32(pop.shape[0])
 
 
@@ -346,72 +377,58 @@ def init_state(problem: Problem, key, doping_seeds=None,
     Traceable end to end — ``GATrainer`` jits it with the problem as an
     argument and ``run_batch``/``sweep.run_grid`` vmap it, all bit-for-bit
     equal: the counts are integers (fusion-proof) and the float objective
-    chain is elementwise.
+    chain is elementwise. In the default dedup mode the state also carries
+    a fresh :class:`~repro.core.dedup.EvalCache` seeded with the initial
+    population's unique rows (per lane under vmap — each batched run gets
+    its own independent table slice).
     """
     cfg = problem.cfg
     key, k_pop = jax.random.split(key)
     pop = initial_population(problem, k_pop, doping_seeds, pop_size)
+    cache = None
     if cfg.fitness_backend == "jnp":
         counts = jnp.zeros((pop.shape[0],), jnp.int32)
         n_eval = jnp.int32(pop.shape[0])
         obj, viol = fitness(problem, pop)
     else:
-        counts, n_eval = initial_counts(problem, pop)
+        if dedup_mode(cfg) == "cache":
+            cache = cache_init(cfg.cache_slots, problem.genes.low.shape[0],
+                               cfg.cache_probes)
+            counts, n_eval, cache = initial_counts(problem, pop, cache)
+        else:
+            counts, n_eval = initial_counts(problem, pop)
         obj, viol = objectives(problem, pop, counts_accuracy(problem, counts))
     rank, crowd = evaluate_ranking(obj, viol)
     return GAState(pop, obj, viol, rank, crowd, counts, key,
-                   jnp.int32(0)), n_eval
+                   jnp.int32(0), cache), n_eval
 
 
 # -- the generation step ----------------------------------------------------
 
 def generation(problem: Problem, state: GAState):
     """One (μ+λ) NSGA-II generation; returns (state, aux) where aux is
-    (best_err, best_area, n_evaluated_rows).
+    (best_err, best_area, n_evaluated_rows, n_cache_hits).
 
-    THE single generation-step implementation: ``GATrainer`` jits/scans it
+    THE single generation-step entry point: ``GATrainer`` jits/scans it
     directly and each island runs it locally under ``shard_map`` (the
     population size is taken from the state, so islands evolve their
-    ``island_pop``-sized shard with the same code).
+    ``island_pop``-sized shard with the same code). The actual step is the
+    ``repro.kernels.pop_generation`` dispatcher — the fused jnp path with
+    the cross-generation cache on CPU, the variation+fitness megakernel on
+    TPU, the per-phase oracle chain on request — every backend
+    bit-identical in the resulting states (``GAConfig.generation_backend``).
     """
-    cfg = problem.cfg
-    P = state.pop.shape[0]
-    key, k_off = jax.random.split(state.key)
-    children = population_variation(
-        k_off, state.pop, state.rank, state.crowd, genes=problem.genes,
-        pc=problem.crossover_rate, pm=problem.mutation_rate_gene,
-        backend=cfg.variation_backend, pop_tile=cfg.pop_tile)
-    pop = jnp.concatenate([state.pop, children], axis=0)
-    if use_dedup(cfg):
-        # count only children that duplicate neither a parent nor each
-        # other; everything else reuses cached integer counts
-        counts, n_eval = dedup_eval(
-            lambda rows, n: population_counts(problem, rows, n),
-            pop, known=state.counts, axis_name=cfg.batch_axis,
-            gene_mask=problem.genes.valid)
-        c_obj, c_viol = objectives(problem, children,
-                                   counts_accuracy(problem, counts[P:]))
-    else:
-        counts = jnp.zeros((2 * P,), jnp.int32)
-        c_obj, c_viol = fitness(problem, children)
-        n_eval = jnp.int32(P)
-    obj = jnp.concatenate([state.obj, c_obj], axis=0)
-    viol = jnp.concatenate([state.viol, c_viol], axis=0)
-    dom = dominance_matrix(obj, viol)
-    rank, crowd = ranking_from_dom(dom, obj)
-    keep = survivor_select(rank, crowd, P)
-    rank2, crowd2 = subset_ranking(dom, obj, keep)
-    new = GAState(pop[keep], obj[keep], viol[keep], rank2, crowd2,
-                  counts[keep], key, state.gen + 1)
-    aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval)
-    return new, aux
+    from ..kernels.pop_generation import population_generation
+    return population_generation(problem, state)
 
 
 def run_scanned(problem: Problem, state: GAState, generations: int):
     """All ``generations`` as one ``lax.scan`` dispatch.
 
-    Returns (final state, aux) with aux = (best_err, best_area, n_eval),
-    each of shape (generations,)."""
+    Returns (final state, aux) with aux = (best_err, best_area, n_eval,
+    n_hit), each of shape (generations,). The state carry — including the
+    cross-generation EvalCache in the default dedup mode — lives inside
+    the scan, so the cache is updated in place across generations."""
     def body(s, _):
         return generation(problem, s)
 

@@ -44,6 +44,7 @@ from .quantize import quantize_inputs
 from .nsga2 import evaluate_ranking
 from .pareto import pareto_front
 from . import engine
+from .dedup import EvalCache
 from .engine import GAConfig, GAState, Problem
 
 
@@ -69,16 +70,30 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
     problem = Problem(jnp.asarray(x_int), jnp.asarray(labels, jnp.int32),
                       jnp.float32(baseline_acc), spec, cfg.ga)
     n_axis = int(np.prod([mesh.shape[a] for a in axis_names]))
+    # the cross-generation eval cache (default dedup mode) travels in the
+    # carry as three extra sharded leaves — one independent table slice per
+    # island, exactly like a run_batch lane's
+    cached = engine.dedup_mode(cfg.ga) == "cache"
+    n_carry = 7 + (3 if cached else 0)
 
-    def island_round(problem, pop, obj, viol, counts, rank, crowd, key):
+    def island_round(problem, pop, obj, viol, counts, rank, crowd, key,
+                     *cache_leaves):
         """Local shard view: pop (island_pop, genes), obj (island_pop, 2),
         viol/counts/rank/crowd (island_pop,), key (1, 2) uint32 (the
-        leading shard axis stays — strip it for jax.random). ``problem``
-        is replicated (every island sees the full dataset) and traced —
-        a closure constant would constant-fold ``baseline_acc`` and shift
-        the violation chain by an ulp vs GATrainer/run_batch."""
+        leading shard axis stays — strip it for jax.random), plus the
+        island's EvalCache leaves (rows/vals/stamp) in the default dedup
+        mode. ``problem`` is replicated (every island sees the full
+        dataset) and traced — a closure constant would constant-fold
+        ``baseline_acc`` and shift the violation chain by an ulp vs
+        GATrainer/run_batch. The per-round state restarts ``gen`` at 0,
+        so cache eviction stamps reset each round — an eviction-quality
+        detail only, never a correctness one (entries are still confirmed
+        by exact row compare)."""
         key = key[0]
-        state = GAState(pop, obj, viol, rank, crowd, counts, key, jnp.int32(0))
+        cache = (EvalCache(*cache_leaves, cfg.ga.cache_probes)
+                 if cache_leaves else None)
+        state = GAState(pop, obj, viol, rank, crowd, counts, key,
+                        jnp.int32(0), cache)
         state, _ = engine.run_scanned(problem, state, cfg.migrate_every)
         pop, obj, viol, counts = state.pop, state.obj, state.viol, state.counts
         rank, crowd, key = state.rank, state.crowd, state.key
@@ -108,18 +123,22 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
             # (the degenerate ring keeps the scan's rank/crowd, which equal
             # a recompute bit-for-bit: nsga2.subset_ranking equivalence)
             rank, crowd = evaluate_ranking(obj, viol)
-        return pop, obj, viol, counts, rank, crowd, key[None]
+        out = (pop, obj, viol, counts, rank, crowd, key[None])
+        if cache_leaves:    # migrants carry their counts; caches stay local
+            out += (state.cache.rows, state.cache.vals, state.cache.stamp)
+        return out
 
     pspec = P(axis_names)
-    # the carry (pop/obj/viol/counts/rank/crowd/key) is donated: round_fn
-    # callers rebind it every round, so its buffers update in place
-    # instead of being copied per dispatch (aliasing only — bit-identical)
+    # the carry (pop/obj/viol/counts/rank/crowd/key + cache leaves) is
+    # donated: round_fn callers rebind it every round, so its buffers
+    # update in place instead of being copied per dispatch (aliasing only
+    # — bit-identical)
     sharded_round = jax.jit(shard_map(
         island_round, mesh=mesh,
-        in_specs=(P(),) + (pspec,) * 7,   # problem replicated, state sharded
-        out_specs=(pspec,) * 7,
+        in_specs=(P(),) + (pspec,) * n_carry,  # problem replicated, state sharded
+        out_specs=(pspec,) * n_carry,
         check_rep=False,
-    ), donate_argnums=tuple(range(1, 8)))
+    ), donate_argnums=tuple(range(1, n_carry + 1)))
 
     # island i == GATrainer(seed + i)'s initial state, all islands in one
     # vmapped dispatch (512 islands ≠ 512 sequential inits). The problem is
@@ -134,10 +153,16 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
         states = init_batched(problem, seed,
                               engine._doping_array(doping_seeds))
         P_glob = n_axis * cfg.island_pop
-        return (states.pop.reshape(P_glob, -1), states.obj.reshape(P_glob, 2),
-                states.viol.reshape(P_glob), states.counts.reshape(P_glob),
-                states.rank.reshape(P_glob), states.crowd.reshape(P_glob),
-                states.key)
+        carry = (states.pop.reshape(P_glob, -1),
+                 states.obj.reshape(P_glob, 2),
+                 states.viol.reshape(P_glob), states.counts.reshape(P_glob),
+                 states.rank.reshape(P_glob), states.crowd.reshape(P_glob),
+                 states.key)
+        if cached:   # per-island cache slices stack on the sharded axis
+            c = states.cache
+            carry += (c.rows.reshape(n_axis * c.rows.shape[1], -1),
+                      c.vals.reshape(-1), c.stamp.reshape(-1))
+        return carry
 
     def round_fn(*carry):
         return sharded_round(problem, *carry)
@@ -158,7 +183,7 @@ def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,
     carry = init(seed, doping_seeds)
     for _ in range(cfg.rounds):
         carry = round_fn(*carry)
-    pop, obj, viol, counts, _, _, _ = carry
+    pop, obj, viol = carry[0], carry[1], carry[2]
     pop = np.asarray(jax.device_get(pop))
 
     # global Pareto peel on host — objectives were carried, not recomputed;

@@ -155,8 +155,10 @@ class SweepResult:
     """Batched result of a (seed × config) sweep.
 
     ``states`` is a GAState whose every leaf has a leading (n_cells,)
-    axis; ``aux`` is (best_err, best_area, n_eval), each (n_cells, gens);
-    ``init_evals`` is the per-cell unique-row count of the initial scoring.
+    axis — including, in the default dedup mode, one independent
+    cross-generation EvalCache slice per cell; ``aux`` is (best_err,
+    best_area, n_eval, n_hit), each (n_cells, gens); ``init_evals`` is
+    the per-cell unique-row count of the initial scoring.
     Cells are C-ordered over ``shape`` = (n_seeds, n_crossover,
     n_mutation, n_max_loss, n_baseline) and described by the flat
     ``cells`` arrays."""
@@ -196,6 +198,11 @@ class SweepResult:
         """Unique chromosome rows actually evaluated by cell ``i`` (init +
         every generation) — comparable to ``GATrainer.unique_evals``."""
         return int(self.init_evals[i]) + int(np.asarray(self.aux[2][i]).sum())
+
+    def cache_hits(self, i: int) -> int:
+        """Evaluations cell ``i`` reused from its cross-generation cache —
+        comparable to ``GATrainer.cache_hits``."""
+        return int(np.asarray(self.aux[3][i]).sum())
 
 
 def run_grid(problem: Problem, seeds, *, crossover_rates=None,
@@ -315,7 +322,7 @@ class SuiteResult:
     positions: list             # per-dataset inner→padded gene positions
     cells: dict                 # flat per-cell arrays + the grid shape
     states: GAState
-    aux: tuple                  # (best_err, best_area, n_eval), (n_cells, gens)
+    aux: tuple                  # (best_err, best_area, n_eval, n_hit)
     init_evals: jnp.ndarray     # (n_cells,) unique rows of the init scoring
 
     @property
@@ -359,8 +366,15 @@ class SuiteResult:
 
     def unique_evals(self, i: int) -> int:
         """Unique chromosome rows cell ``i`` actually evaluated — matches
-        the unpadded sequential ``GATrainer.unique_evals`` exactly."""
+        the unpadded sequential ``GATrainer.unique_evals`` exactly (the
+        cross-generation cache probes by id-addressed hashes, so padded
+        lanes hit, insert and evict exactly like their unpadded runs)."""
         return int(self.init_evals[i]) + int(np.asarray(self.aux[2][i]).sum())
+
+    def cache_hits(self, i: int) -> int:
+        """Evaluations cell ``i`` reused from its cross-generation cache —
+        matches the unpadded sequential ``GATrainer.cache_hits``."""
+        return int(np.asarray(self.aux[3][i]).sum())
 
 
 def _sample_buckets(sizes, factor):

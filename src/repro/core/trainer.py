@@ -20,9 +20,13 @@ dispatcher — Pallas kernel on TPU, sample/population-tiled jnp elsewhere —
 selected by ``GAConfig.fitness_backend``. Generations execute as a single
 ``lax.scan`` dispatch (``GAConfig.scan``), only children are ever scored
 (parent objectives ride in ``GAState``), duplicate children reuse cached
-objectives (``GAConfig.dedup``, see ``repro.core.dedup``), and survivor
-re-ranking reuses the combined pool's dominance matrix. All of these are
-bit-exact w.r.t. the naive loop.
+integer counts — within a generation AND across them, via the
+cross-generation ``EvalCache`` carried in the scan state (``GAConfig.dedup``,
+default; see ``repro.core.dedup``) — and survivor re-ranking reuses the
+combined pool's dominance matrix. All of these are bit-exact w.r.t. the
+naive loop. After a scanned run, ``unique_evals`` counts the rows actually
+evaluated and ``cache_hits`` the evaluations the cross-generation cache
+saved.
 """
 from __future__ import annotations
 
@@ -96,12 +100,13 @@ class GATrainer:
         history = []
         t0 = time.time()
         if scan and gens > 0:
-            state, (best_err, best_area, n_eval) = self._scan_jit(
+            state, (best_err, best_area, n_eval, n_hit) = self._scan_jit(
                 self.problem, state, generations=gens)
             jax.block_until_ready(state.pop)
             elapsed = time.time() - t0
             self.unique_evals = (int(np.asarray(n_eval).sum())
                                  + self._init_unique_evals)
+            self.cache_hits = int(np.asarray(n_hit).sum())
             if verbose:
                 for g in range(gens):
                     if g % self.cfg.log_every == 0 or g == gens - 1:
@@ -114,6 +119,7 @@ class GATrainer:
                         })
         else:
             self.unique_evals = None
+            self.cache_hits = None
             for g in range(gens):
                 state = self._step_jit(self.problem, state)
                 if verbose and (g % self.cfg.log_every == 0 or g == gens - 1):

@@ -6,4 +6,5 @@ from .pow2_matmul import pow2_linear, pow2_matmul, pow2_matmul_ref, pack_weights
 from .flash_attention import causal_attention, flash_attention, flash_attention_ref
 from .pop_mlp import population_correct, pop_mlp_correct, pop_mlp_correct_ref
 from .pop_variation import population_variation, pop_variation_kernel, pop_variation_ref
+from .pop_generation import population_generation, pop_generation_kernel, pop_generation_jnp
 from .ssd_scan import state_scan, ssd_state_scan, ssd_state_scan_ref

@@ -1,0 +1,3 @@
+from .ops import population_generation, BACKENDS
+from .kernel import pop_generation_kernel
+from .ref import pop_generation_jnp

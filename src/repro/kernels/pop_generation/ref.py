@@ -1,0 +1,87 @@
+"""Fused jnp generation step — the CPU/GPU fast path of the
+``population_generation`` dispatcher.
+
+One NSGA-II (μ+λ) generation as a single traced region: variation
+(through the ``population_variation`` dispatcher) → duplicate-suppressed
+fitness → dominance ranking → survivor selection. ``use_cache=True`` (the
+"ref" backend) routes the fitness through the cross-generation
+:class:`~repro.core.dedup.EvalCache` carried in ``GAState`` — children
+identical to any chromosome evaluated earlier in the run reuse its integer
+correct count and the packed evaluation batch shrinks accordingly (the
+``n_valid`` tile skip makes the saving real). ``use_cache=False`` (the
+"phases" backend) is the per-phase oracle chain of earlier revisions:
+within-generation dedup only, the cache (if any) carried through untouched.
+
+Both paths produce bit-identical states: cached values are exact integer
+counts, so *which* rows skip evaluation can never change a result, only
+its cost — the float objective chain always runs on the same ints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.dedup import dedup_eval
+from ...core.nsga2 import (dominance_matrix, ranking_from_dom,
+                           subset_ranking, survivor_select)
+from ..pop_variation import population_variation
+
+
+def _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
+                     n_eval, n_hit):
+    """Shared (μ+λ) tail: rank the pool, keep the best P, emit aux."""
+    P = state.pop.shape[0]
+    obj = jnp.concatenate([state.obj, c_obj], axis=0)
+    viol = jnp.concatenate([state.viol, c_viol], axis=0)
+    dom = dominance_matrix(obj, viol)
+    rank, crowd = ranking_from_dom(dom, obj)
+    keep = survivor_select(rank, crowd, P)
+    rank2, crowd2 = subset_ranking(dom, obj, keep)
+    new = type(state)(pop[keep], obj[keep], viol[keep], rank2, crowd2,
+                      counts[keep], key, state.gen + 1, cache)
+    aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval, n_hit)
+    return new, aux
+
+
+def pop_generation_jnp(problem, state, use_cache: bool = True):
+    """One generation, fused jnp — see module docstring.
+
+    Returns (new_state, (best_err, best_area, n_eval, n_hit)).
+    """
+    from ...core import engine  # lazy: engine dispatches back into us
+
+    cfg = problem.cfg
+    P = state.pop.shape[0]
+    key, k_off = jax.random.split(state.key)
+    children = population_variation(
+        k_off, state.pop, state.rank, state.crowd, genes=problem.genes,
+        pc=problem.crossover_rate, pm=problem.mutation_rate_gene,
+        backend=cfg.variation_backend, pop_tile=cfg.pop_tile)
+    pop = jnp.concatenate([state.pop, children], axis=0)
+
+    mode = engine.dedup_mode(cfg)
+    cache = state.cache
+    n_hit = jnp.int32(0)
+    eval_fn = lambda rows, n: engine.population_counts(problem, rows, n)
+    if mode == "cache" and use_cache and cache is not None:
+        # children duplicating a parent, each other, or ANY chromosome
+        # evaluated earlier in the run reuse cached integer counts
+        counts, n_eval, n_hit, cache = dedup_eval(
+            eval_fn, pop, known=state.counts, axis_name=cfg.batch_axis,
+            gene_mask=problem.genes.valid, cache=cache, gen=state.gen + 1,
+            ids=problem.genes.ids)
+        c_obj, c_viol = engine.objectives(
+            problem, children, engine.counts_accuracy(problem, counts[P:]))
+    elif mode != "off":
+        # within-generation dedup only (the legacy/oracle path)
+        counts, n_eval = dedup_eval(
+            eval_fn, pop, known=state.counts, axis_name=cfg.batch_axis,
+            gene_mask=problem.genes.valid, ids=problem.genes.ids)
+        c_obj, c_viol = engine.objectives(
+            problem, children, engine.counts_accuracy(problem, counts[P:]))
+    else:
+        counts = jnp.zeros((2 * P,), jnp.int32)
+        c_obj, c_viol = engine.fitness(problem, children)
+        n_eval = jnp.int32(P)
+    return _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
+                            n_eval, n_hit)

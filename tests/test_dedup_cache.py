@@ -1,0 +1,209 @@
+"""Cross-generation :class:`repro.core.dedup.EvalCache` unit behavior.
+
+The cache may only ever change *cost* (which rows get evaluated), never a
+value: lookups confirm candidates by exact row compare, so engineered
+32-bit hash-pair collisions and capacity-overflow eviction must both leave
+every returned value exact. These tests construct real colliding rows
+(solving the two multiplicative-hash equations mod 2^32), overflow a tiny
+table, and check per-lane table independence under ``vmap``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GAConfig, GATrainer
+from repro.core.dedup import (EvalCache, cache_init, cache_lookup,
+                              dedup_eval, hash_rows)
+from repro.core.genome import MLPTopology
+
+
+MOD = 1 << 32
+
+
+def _eval_fn(batch, n_valid):
+    """Synthetic int32 fitness: wrapping row sum (cheap exact oracle)."""
+    del n_valid
+    return jnp.sum(batch, axis=1)
+
+
+def _colliding_rows(G=8):
+    """Two distinct (G,) int32 rows with identical (h1, h2) hash pairs.
+
+    ``hash_rows`` is linear over uint32, so a collision is a nonzero delta
+    with  Σ dᵢ·c1ᵢ ≡ Σ dᵢ·c2ᵢ ≡ 0 (mod 2^32).  Support the delta on genes
+    0..2: eliminate d1 via the first equation (c1₁ is odd, hence
+    invertible) and solve the remaining single congruence a·d0 ≡ b(d2) by
+    stripping the 2-adic part of ``a``.
+    """
+    c1 = [((g * 2654435761 + 0x9E3779B9) % MOD) | 1 for g in range(G)]
+    c2 = [((g * 40503 + 0x85EBCA6B) % MOD) | 1 for g in range(G)]
+    inv1 = pow(c1[1], -1, MOD)
+    a = (c2[0] - c2[1] * c1[0] * inv1) % MOD
+    t = (a & -a).bit_length() - 1 if a else 32
+    assert t < 32, "hash coefficients degenerate; pick other genes"
+    for d2 in range(1, 1 << (t + 1)):
+        b = (c2[1] * c1[2] * d2 * inv1 - c2[2] * d2) % MOD
+        if b % (1 << t):
+            continue
+        d0 = ((b >> t) * pow(a >> t, -1, MOD >> t)) % (MOD >> t)
+        d1 = (-(c1[0] * d0 + c1[2] * d2) * inv1) % MOD
+        delta = np.zeros(G, np.uint64)
+        delta[:3] = (d0, d1, d2)
+        row_a = np.arange(1, G + 1, dtype=np.uint64)
+        row_b = ((row_a + delta) % MOD).astype(np.uint32)
+        return row_a.astype(np.int32), row_b.view(np.int32)
+    raise AssertionError("no collision delta found")
+
+
+# -- hash collisions ---------------------------------------------------------
+
+def test_constructed_rows_do_collide():
+    row_a, row_b = _colliding_rows()
+    assert (row_a != row_b).any()
+    h1, h2 = hash_rows(jnp.stack([jnp.asarray(row_a), jnp.asarray(row_b)]))
+    assert int(h1[0]) == int(h1[1]) and int(h2[0]) == int(h2[1])
+
+
+def test_colliding_rows_both_evaluated_exactly():
+    """Identical hash pairs share identical probe sequences; the exact row
+    compare still tells the rows apart, so both are scored correctly —
+    collisions cost redundant evals, never wrong values."""
+    row_a, row_b = _colliding_rows()
+    rows = jnp.asarray(np.stack([row_a, row_b]))
+    truth = np.asarray(jnp.sum(rows, axis=1))
+    cache = cache_init(8, rows.shape[1])
+
+    # call 1: cold cache — both rows are genuine misses
+    out, n_eval, n_hit, cache = dedup_eval(_eval_fn, rows, cache=cache,
+                                           gen=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out), truth)
+    assert (int(n_eval), int(n_hit)) == (2, 0)
+
+    # both inserts target the same oldest probe slot; the lowest-index row
+    # wins and the other is dropped — so call 2 re-evaluates exactly one
+    out, n_eval, n_hit, cache = dedup_eval(_eval_fn, rows, cache=cache,
+                                           gen=jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(out), truth)
+    assert (int(n_eval), int(n_hit)) == (1, 1)
+
+    # the loser landed in the next probe slot — call 3 is all hits
+    out, n_eval, n_hit, cache = dedup_eval(_eval_fn, rows, cache=cache,
+                                           gen=jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(out), truth)
+    assert (int(n_eval), int(n_hit)) == (0, 2)
+
+    # and the table really holds both colliding rows now
+    h1, h2 = hash_rows(rows)
+    hit, vals, _ = cache_lookup(cache, rows, h1, h2)
+    assert bool(hit.all())
+    np.testing.assert_array_equal(np.asarray(vals), truth)
+
+
+def test_repeat_rows_hit_on_later_calls():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, 5, (12, 6)), jnp.int32)
+    n_unique = len(np.unique(np.asarray(rows), axis=0))
+    truth = np.asarray(jnp.sum(rows, axis=1))
+    cache = cache_init(64, 6)
+    out, n_eval, n_hit, cache = dedup_eval(_eval_fn, rows, cache=cache,
+                                           gen=jnp.int32(0))
+    assert (int(n_eval), int(n_hit)) == (n_unique, 0)
+    np.testing.assert_array_equal(np.asarray(out), truth)
+    # inserts racing for one slot drop all but the lowest row, so a few
+    # calls may be needed before every unique row is resident — but each
+    # call covers the full batch (eval + hits) and shrinks the miss set
+    for call in range(1, 5):
+        out, n_eval, n_hit, cache = dedup_eval(_eval_fn, rows, cache=cache,
+                                               gen=jnp.int32(call))
+        np.testing.assert_array_equal(np.asarray(out), truth)
+        assert int(n_eval) + int(n_hit) == n_unique
+        if int(n_eval) == 0:
+            break
+    assert int(n_eval) == 0 and int(n_hit) == n_unique
+
+
+# -- eviction ----------------------------------------------------------------
+
+def test_eviction_table_smaller_than_unique_set_stays_exact():
+    """A 4-slot table fed 16 distinct rows over 8 calls must evict — and
+    every call's outputs must still equal the oracle exactly."""
+    rng = np.random.default_rng(1)
+    uniq = np.unique(rng.integers(0, 100, (24, 5)), axis=0)[:16]
+    cache = cache_init(4, 5)
+    assert cache.capacity == 4
+    total_hits = 0
+    for call in range(8):
+        pick = rng.integers(0, 16, (6,))
+        rows = jnp.asarray(uniq[pick], jnp.int32)
+        out, n_eval, n_hit, cache = dedup_eval(
+            _eval_fn, rows, cache=cache, gen=jnp.int32(call))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(jnp.sum(rows, axis=1)),
+                                      err_msg=f"call {call}")
+        total_hits += int(n_hit)
+    occ = int((np.asarray(cache.stamp) >= 0).sum())
+    assert occ <= 4                       # never grew past capacity
+    assert total_hits > 0                 # the tiny table was still useful
+
+
+def test_cache_init_rounds_capacity_to_power_of_two():
+    assert cache_init(4, 3).capacity == 4
+    assert cache_init(5, 3).capacity == 8
+    assert cache_init(4096, 3).capacity == 4096
+
+
+# -- per-lane independence under vmap ----------------------------------------
+
+def test_vmap_lanes_keep_independent_tables():
+    """run_batch/run_grid/run_suite carry one table slice per lane; a
+    lane's inserts must never be visible to another lane's lookups."""
+    rng = np.random.default_rng(2)
+    rows = jnp.asarray(rng.integers(0, 50, (2, 6, 4)), jnp.int32)
+    c0 = cache_init(16, 4)
+    caches = jax.tree_util.tree_map(lambda x: jnp.stack([x, x]), c0)
+
+    def run(rows_lane, cache_lane):
+        return dedup_eval(_eval_fn, rows_lane, axis_name="lane",
+                          cache=cache_lane, gen=jnp.int32(0))
+
+    out, n_eval, n_hit, caches = jax.vmap(run, axis_name="lane")(rows, caches)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.sum(rows, axis=2)))
+    for lane in range(2):
+        mine = EvalCache(caches.rows[lane], caches.vals[lane],
+                         caches.stamp[lane], c0.probes)
+        h1, h2 = hash_rows(rows[lane])
+        hit, _, _ = cache_lookup(mine, rows[lane], h1, h2)
+        # same-batch insert conflicts may drop a row or two, but most of
+        # the lane's own rows must be resident...
+        assert int(hit.sum()) >= rows.shape[1] - 2, \
+            f"lane {lane} lost its own rows"
+        other = rows[1 - lane]
+        h1, h2 = hash_rows(other)
+        hit, _, _ = cache_lookup(mine, other, h1, h2)
+        # ...and NONE of the other lane's (the independence property)
+        assert not bool(hit.any()), f"lane {lane} sees lane {1 - lane}'s rows"
+
+
+# -- engine-level eviction ---------------------------------------------------
+
+def test_trainer_with_tiny_cache_is_bit_identical(bc_dataset):
+    """cache_slots far below the run's unique-genome count forces constant
+    eviction — states must still equal the cache-off run bit for bit."""
+    ds = bc_dataset
+    topo = MLPTopology(ds.topology)
+
+    def run(**kw):
+        cfg = GAConfig(pop_size=16, generations=5, seed=11,
+                       fitness_backend="ref", **kw)
+        tr = GATrainer(topo, ds.x_train, ds.y_train, cfg)
+        return tr.run()[0], tr
+
+    s_off, _ = run(dedup=False)
+    s_tiny, tr = run(dedup=True, cache_slots=16)
+    assert tr.unique_evals > 16          # the table definitely overflowed
+    # counts excluded: the dedup-off path keeps them zero by design
+    for name in ("pop", "obj", "viol", "rank", "crowd", "key"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_off, name)), np.asarray(getattr(s_tiny, name)),
+            err_msg=f"GAState.{name} differs with tiny cache")

@@ -1,0 +1,218 @@
+"""The fused generation path: ``repro.kernels.pop_generation`` backends and
+the cross-generation EvalCache must be invisible in the results — every
+(generation_backend × dedup mode) combination reproduces the per-phase
+legacy chain bit for bit across the trainer, the batched/swept runners and
+the island ring; only the evaluation *accounting* (unique_evals,
+cache_hits) may differ."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import GAConfig, GATrainer
+from repro.core import engine, sweep
+from repro.core.genome import MLPTopology, GenomeSpec
+from repro.core.islands import IslandConfig, run_islands
+from repro.kernels.pop_generation import BACKENDS, population_generation
+from repro.data import load_dataset
+
+
+STATE_FIELDS = ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen")
+# the dedup-off path keeps GAState.counts zero by design, so comparisons
+# across dedup on/off skip it
+NO_COUNTS = tuple(f for f in STATE_FIELDS if f != "counts")
+
+
+def assert_states_equal(a, b, msg="", fields=STATE_FIELDS):
+    for name in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{msg}: GAState.{name} differs")
+
+
+def _run(ds, **kw):
+    cfg = GAConfig(pop_size=16, generations=4, seed=2,
+                   fitness_backend="ref", **kw)
+    tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train, cfg)
+    state, _ = tr.run()
+    return state, tr
+
+
+@pytest.fixture(scope="module")
+def converged(bc_dataset):
+    """A doped exploitation-regime workload: low pm/pc over a population
+    seeded from near-identical elites, so children recur across
+    generations and the cross-generation cache actually hits."""
+    ds = bc_dataset
+    spec = GenomeSpec(MLPTopology(ds.topology))
+    rng = np.random.default_rng(0)
+    base = np.asarray(spec.random(jax.random.PRNGKey(7), 1))[0]
+    low, high = np.asarray(spec.low), np.asarray(spec.high)
+    elites = []
+    for _ in range(8):
+        g = base.copy()
+        for j in rng.choice(g.shape[0], 4, replace=False):
+            g[j] = rng.integers(low[j], high[j])
+        elites.append(g)
+    return ds, list(np.stack(elites))
+
+
+# -- dispatcher backends -----------------------------------------------------
+
+def test_backend_list_is_closed():
+    assert BACKENDS == ("auto", "kernel", "interpret", "ref", "phases")
+    spec = GenomeSpec(MLPTopology((4, 3, 2)))
+    cfg = GAConfig(pop_size=8)
+    problem = engine.Problem.from_data(
+        MLPTopology((4, 3, 2)),
+        np.zeros((16, 4), np.float32), np.zeros(16, np.int64), cfg)
+    state, _ = engine.init_state(problem, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="backend"):
+        population_generation(problem, state, backend="nope")
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("dedup", ["legacy", True])
+def test_backends_match_phases_oracle(bc_dataset, backend, dedup):
+    """Acceptance: the fused-jnp path and the interpret-mode megakernel
+    reproduce the per-phase legacy chain through a whole scanned run, for
+    both the legacy within-generation dedup and the cross-gen cache."""
+    ds = bc_dataset
+    s_ref, _ = _run(ds, dedup="legacy", generation_backend="phases")
+    s_new, _ = _run(ds, dedup=dedup, generation_backend=backend)
+    assert_states_equal(s_ref, s_new, msg=f"{backend}/{dedup}")
+
+
+def test_interpret_megakernel_single_step(bc_dataset):
+    """One generation, eager: megakernel children AND counts equal the
+    per-phase chain's (not just the post-selection survivors)."""
+    ds = bc_dataset
+    cfg = GAConfig(pop_size=16, seed=4, fitness_backend="ref", dedup=False)
+    problem = engine.Problem.from_data(MLPTopology(ds.topology),
+                                       ds.x_train, ds.y_train, cfg)
+    state, _ = engine.init_state(problem, jax.random.PRNGKey(3))
+    s_ph, aux_ph = population_generation(problem, state, backend="phases")
+    s_ik, aux_ik = population_generation(problem, state, backend="interpret")
+    assert_states_equal(s_ph, s_ik, msg="single step")
+    for k in range(2):
+        np.testing.assert_array_equal(np.asarray(aux_ph[k]),
+                                      np.asarray(aux_ik[k]))
+
+
+# -- cache on/off bit-identity ----------------------------------------------
+
+def test_trainer_cache_modes_bit_identical(converged):
+    """dedup False / "legacy" / True (cache) give identical states and
+    fronts on a converged doped run — and the cache genuinely hits."""
+    ds, elites = converged
+    states, trainers = {}, {}
+    for dd in (False, "legacy", True):
+        cfg = GAConfig(pop_size=64, generations=12, seed=1,
+                       fitness_backend="ref", mutation_rate_gene=0.0005,
+                       crossover_rate=0.1, doping_frac=1.0, dedup=dd)
+        tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                       cfg, doping_seeds=elites)
+        states[dd], _ = tr.run()
+        trainers[dd] = tr
+    assert_states_equal(states[False], states["legacy"], msg="legacy",
+                        fields=NO_COUNTS)
+    assert_states_equal(states["legacy"], states[True], msg="cache")
+    f_off = engine.front_of(states[False])
+    f_on = engine.front_of(states[True])
+    np.testing.assert_array_equal(f_off["objectives"], f_on["objectives"])
+    np.testing.assert_array_equal(f_off["genomes"], f_on["genomes"])
+    assert trainers[True].cache_hits > 0, "converged run never hit the cache"
+    # cross-gen reuse strictly reduces evaluations vs within-gen dedup
+    assert (trainers[True].unique_evals
+            == trainers["legacy"].unique_evals - trainers[True].cache_hits)
+    assert states[True].cache is not None
+    assert states[False].cache is None
+
+
+def test_run_batch_cache_vs_off_and_per_seed(bc_dataset):
+    """run_batch with the cache equals both the cache-off batch and each
+    per-seed sequential run (per-lane table slices, shared pmax bound)."""
+    ds = bc_dataset
+    seeds = [0, 1, 2]
+    cfg_on = GAConfig(pop_size=16, generations=4, fitness_backend="ref")
+    cfg_off = dataclasses.replace(cfg_on, dedup=False)
+    p_on = engine.Problem.from_data(MLPTopology(ds.topology), ds.x_train,
+                                    ds.y_train, cfg_on)
+    p_off = engine.Problem.from_data(MLPTopology(ds.topology), ds.x_train,
+                                     ds.y_train, cfg_off)
+    st_on, aux_on, n0_on = engine.run_batch(p_on, seeds)
+    st_off, _, _ = engine.run_batch(p_off, seeds)
+    for i, s in enumerate(seeds):
+        assert_states_equal(engine.state_at(st_on, i),
+                            engine.state_at(st_off, i), msg=f"seed {s}",
+                            fields=NO_COUNTS)
+        cfg_i = dataclasses.replace(cfg_on, seed=s)
+        tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                       cfg_i)
+        s_seq, _ = tr.run()
+        assert_states_equal(engine.state_at(st_on, i), s_seq,
+                            msg=f"seed {s} vs sequential")
+        assert (int(np.asarray(aux_on[2][i]).sum())
+                + int(n0_on[i])) == tr.unique_evals
+        assert int(np.asarray(aux_on[3][i]).sum()) == tr.cache_hits
+
+
+def test_run_grid_cache_accounting_matches_trainer(bc_dataset):
+    """Every grid cell's unique_evals AND cache_hits equal the sequential
+    trainer's — the per-cell table slices probe identically."""
+    ds = bc_dataset
+    cfg = GAConfig(pop_size=16, generations=4, fitness_backend="ref")
+    problem = engine.Problem.from_data(MLPTopology(ds.topology), ds.x_train,
+                                       ds.y_train, cfg)
+    rates = (0.02, 0.05)
+    result = sweep.run_grid(problem, [0, 3], mutation_rates=rates)
+    for i in range(result.n_cells):
+        cell = result.cell(i)
+        cfg_i = dataclasses.replace(cfg, seed=cell["seed"],
+                                    mutation_rate_gene=cell["mutation_rate_gene"])
+        tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                       cfg_i)
+        s_seq, _ = tr.run()
+        assert_states_equal(result.state_at(i), s_seq, msg=f"cell {cell}")
+        assert result.unique_evals(i) == tr.unique_evals, f"cell {cell}"
+        assert result.cache_hits(i) == tr.cache_hits, f"cell {cell}"
+
+
+def test_run_suite_cache_accounting_matches_trainer(bc_dataset):
+    """Padded suite lanes hash by draw id, so probe/insert/evict order —
+    hence unique_evals and cache_hits — match the unpadded trainer."""
+    rw = load_dataset("redwine")
+    datasets = (bc_dataset, rw)
+    cfg = GAConfig(pop_size=16, generations=4)
+    problems = [engine.Problem.from_data(MLPTopology(d.topology), d.x_train,
+                                         d.y_train, cfg) for d in datasets]
+    result = sweep.run_suite(problems, [0, 1],
+                             names=[d.name for d in datasets])
+    for i in range(result.n_cells):
+        cell = result.cell(i)
+        ds = next(d for d in datasets if d.name == cell["dataset"])
+        cfg_i = dataclasses.replace(cfg, seed=cell["seed"])
+        tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                       cfg_i)
+        tr.run()
+        assert result.unique_evals(i) == tr.unique_evals, f"cell {cell}"
+        assert result.cache_hits(i) == tr.cache_hits, f"cell {cell}"
+
+
+def test_islands_cache_vs_off_front_identical(bc_dataset):
+    """The cache leaves ride the shard_map carry: a degenerate 1-island
+    run returns the same front with and without them."""
+    ds = bc_dataset
+    mesh = jax.make_mesh((1,), ("data",))
+    fronts = {}
+    for dd in (False, True):
+        cfg = GAConfig(pop_size=16, generations=6, seed=3, dedup=dd)
+        icfg = IslandConfig(ga=cfg, island_pop=16, migrate_every=3,
+                            n_migrants=2, rounds=2)
+        fronts[dd], _ = run_islands(MLPTopology(ds.topology), ds.x_train,
+                                    ds.y_train, mesh, icfg, seed=3)
+    np.testing.assert_array_equal(fronts[False]["objectives"],
+                                  fronts[True]["objectives"])
+    np.testing.assert_array_equal(fronts[False]["genomes"],
+                                  fronts[True]["genomes"])
