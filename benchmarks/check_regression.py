@@ -23,6 +23,14 @@ a *conservative* (low) observed value for the gated ratio keys — e.g. the
 minimum over a few runs — rather than a lucky high sample; the ratios can
 swing ~20% run-to-run on a loaded machine, and the gate's tolerance should
 catch rot, not noise.
+
+Core-count guard: in-process ratios mostly cancel runner speed, but not
+runner *shape* — the batched/vmapped rows (and anything whose two sides
+parallelise differently) skew hard when a baseline recorded on an N-core
+box is compared against a fresh run on an M-core one. When the recorded
+``cpu_count`` values differ (or the baseline predates the field), the
+relative gates are reported but do not fail; the ABSOLUTE_FLOORS still
+apply unconditionally — they encode acceptance bars, not history.
 """
 from __future__ import annotations
 
@@ -37,20 +45,30 @@ GATED_SPEEDUPS = (
     "batched_seeds_speedup_vs_sequential",
     "swept_configs_speedup_vs_sequential",
     "suite_speedup_vs_sequential",
+    "ranking_speedup_vs_matrix",
 )
 
 # Absolute floors on top of the relative gate: these targets must hold no
 # matter what the committed baseline says (they are within-process ratios,
 # so runner speed cancels out). The trainer target is the cross-generation
-# EvalCache acceptance bar on the converged-population workload.
+# EvalCache acceptance bar on the converged-population workload; the
+# ranking target is the O(P log P) sweep acceptance bar vs the O(P²)
+# dominance-matrix oracle at pop 256 (the (μ+λ) pool of 512).
 ABSOLUTE_FLOORS = {
     "trainer_dedup_on_speedup_vs_seed": 6.0,
+    "ranking_speedup_vs_matrix": 2.0,
 }
 
 
 def check(baseline: dict, fresh: dict, max_regression: float):
     """Returns (failures, report_lines) for the gated speedup keys."""
     failures, lines = [], []
+    base_cores, fresh_cores = baseline.get("cpu_count"), fresh.get("cpu_count")
+    cores_match = base_cores is not None and base_cores == fresh_cores
+    if not cores_match:
+        lines.append(f"NOTE relative gates skipped: baseline cpu_count="
+                     f"{base_cores} vs fresh cpu_count={fresh_cores} "
+                     "(absolute floors still apply)")
     for key in GATED_SPEEDUPS:
         if key not in fresh:
             failures.append(f"{key}: missing from fresh results")
@@ -68,6 +86,10 @@ def check(baseline: dict, fresh: dict, max_regression: float):
             continue
         old = float(baseline[key])
         floor = old * (1.0 - max_regression)
+        if not cores_match:
+            lines.append(f"SKIP {key}: {new:.2f}x vs baseline {old:.2f}x "
+                         "(different core count — not comparable)")
+            continue
         status = "PASS" if new >= floor else "FAIL"
         lines.append(f"{status} {key}: {new:.2f}x vs baseline {old:.2f}x "
                      f"(floor {floor:.2f}x at -{max_regression:.0%})")

@@ -47,7 +47,9 @@ def main():
     # results either way). Knobs: dedup=True|"cache"|"legacy"|False,
     # cache_slots (table size, default 4096, rounded to a power of two),
     # cache_probes (probe depth), generation_backend ("auto" fuses the
-    # whole generation: Pallas megakernel on TPU, fused jnp elsewhere).
+    # whole generation: Pallas megakernel on TPU, fused jnp elsewhere),
+    # ranking_backend ("auto" = the O(P log P) sweep NSGA-II ranking;
+    # "matrix" selects the O(P²) dominance-matrix oracle — bit-identical).
     trainer = GATrainer(topo, ds.x_train, ds.y_train,
                         GAConfig(pop_size=64, generations=60),
                         baseline_acc=bb.accuracy, doping_seeds=seeds)

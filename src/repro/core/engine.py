@@ -42,7 +42,7 @@ from .quantize import quantize_inputs
 from .mlp import population_accuracy
 from .area import population_area
 from .dedup import EvalCache, cache_init, dedup_eval
-from .nsga2 import evaluate_ranking
+from ..kernels.pop_ranking import population_ranking
 from .pareto import pareto_front
 from ..kernels.pop_mlp import population_correct
 
@@ -68,6 +68,11 @@ class GAConfig:
     # "ref" is the fused jnp path with the cross-generation cache (the CPU
     # fast path), "phases" the per-phase oracle chain. All bit-identical.
     generation_backend: str = "auto"
+    # NSGA-II survivor ranking: auto|sweep|matrix — "sweep" (the default
+    # behind auto) is the O(P log P) sort-based constrained ranking of
+    # kernels.pop_ranking, "matrix" the O(P²) dominance-matrix oracle.
+    # Bit-identical ranks/crowding/survivors either way.
+    ranking_backend: str = "auto"
     # population tile — shared by the fitness "ref" backend and the
     # variation Pallas kernel (one knob tiles both hot paths)
     pop_tile: int = 64
@@ -398,7 +403,7 @@ def init_state(problem: Problem, key, doping_seeds=None,
         else:
             counts, n_eval = initial_counts(problem, pop)
         obj, viol = objectives(problem, pop, counts_accuracy(problem, counts))
-    rank, crowd = evaluate_ranking(obj, viol)
+    rank, crowd = population_ranking(obj, viol, backend=cfg.ranking_backend)
     return GAState(pop, obj, viol, rank, crowd, counts, key,
                    jnp.int32(0), cache), n_eval
 

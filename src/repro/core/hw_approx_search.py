@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from .dedup import unique_rows
-from .nsga2 import evaluate_ranking, survivor_select, tournament_select
+from .nsga2 import survivor_select, tournament_select
+from ..kernels.pop_ranking import population_ranking
 from .pareto import pareto_front
 from .quantize import (pow2_quantize, pow2_dequantize, int8_quantize,
                        int8_dequantize)
@@ -128,7 +129,8 @@ class LMApproxSearch:
         pop[1] = 2                                   # dope: all-pow2
         for _ in range(generations):
             obj, viol = self.evaluate(pop)
-            rank, crowd = evaluate_ranking(jnp.asarray(obj), jnp.asarray(viol))
+            rank, crowd = population_ranking(jnp.asarray(obj),
+                                             jnp.asarray(viol))
             parents = np.asarray(tournament_select(
                 jax.random.PRNGKey(rng.integers(2**31)),
                 rank, crowd, self.pop_size))
@@ -141,8 +143,8 @@ class LMApproxSearch:
                             kids)
             both = np.concatenate([pop, kids])
             obj2, viol2 = self.evaluate(both)
-            rank2, crowd2 = evaluate_ranking(jnp.asarray(obj2),
-                                             jnp.asarray(viol2))
+            rank2, crowd2 = population_ranking(jnp.asarray(obj2),
+                                               jnp.asarray(viol2))
             keep = np.asarray(survivor_select(rank2, crowd2, self.pop_size))
             pop = both[keep]
         obj, viol = self.evaluate(pop)

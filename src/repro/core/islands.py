@@ -41,7 +41,7 @@ from jax.experimental.shard_map import shard_map
 
 from .genome import GenomeSpec, MLPTopology
 from .quantize import quantize_inputs
-from .nsga2 import evaluate_ranking
+from ..kernels.pop_ranking import population_ranking
 from .pareto import pareto_front
 from . import engine
 from .dedup import EvalCache
@@ -122,7 +122,8 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
             # migration invalidated the ranking — recompute for next round
             # (the degenerate ring keeps the scan's rank/crowd, which equal
             # a recompute bit-for-bit: nsga2.subset_ranking equivalence)
-            rank, crowd = evaluate_ranking(obj, viol)
+            rank, crowd = population_ranking(
+                obj, viol, backend=cfg.ga.ranking_backend)
         out = (pop, obj, viol, counts, rank, crowd, key[None])
         if cache_leaves:    # migrants carry their counts; caches stay local
             out += (state.cache.rows, state.cache.vals, state.cache.stamp)

@@ -12,6 +12,12 @@ compatible:
 
 The 10 % accuracy-loss feasibility bound of the paper enters through the
 violation vector ``viol`` (0 = feasible).
+
+The dominance-matrix + front-peel pair here is the O(P²) *oracle* path of
+the ``repro.kernels.pop_ranking`` dispatcher
+(``GAConfig.ranking_backend="matrix"``); the default "sweep" backend
+computes identical ranks in O(P log P) fixed-shape sorts and scans.
+Crowding, tournament and survivor selection are shared by both backends.
 """
 from __future__ import annotations
 
@@ -43,14 +49,23 @@ def nondominated_rank(dom: jnp.ndarray) -> jnp.ndarray:
     a bool mask-and-reduce: converged pools peel hundreds of fronts per
     generation, and the O(P²) body dominated the NSGA-II cost of the fitness
     hot loop. Counts stay ≤ P < 2²⁴ so float32 arithmetic is integer-exact —
-    ranks are bit-identical to the bool formulation."""
+    ranks are bit-identical to the bool formulation.
+
+    The loop is bounded at P iterations (every front holds at least one
+    individual, so at most P peels rank everyone; the cycle-free dominance
+    relation alone guarantees termination, but the traced cond carries the
+    explicit ``r < P`` bound so the loop is provably finite in the HLO
+    too). This matrix path is the seed-semantics oracle of the
+    ``repro.kernels.pop_ranking`` dispatcher; the default "sweep" backend
+    computes the same ranks in O(P log P) fixed-shape ops — see
+    ``pop_ranking.sweep``."""
     P = dom.shape[0]
     UNRANKED = P
     domf = dom.astype(jnp.float32)
 
     def cond(carry):
-        rank, _, _ = carry
-        return jnp.any(rank == UNRANKED)
+        rank, _, r = carry
+        return jnp.any(rank == UNRANKED) & (r < P)
 
     def body(carry):
         rank, n_dominators, r = carry

@@ -7,4 +7,5 @@ from .flash_attention import causal_attention, flash_attention, flash_attention_
 from .pop_mlp import population_correct, pop_mlp_correct, pop_mlp_correct_ref
 from .pop_variation import population_variation, pop_variation_kernel, pop_variation_ref
 from .pop_generation import population_generation, pop_generation_kernel, pop_generation_jnp
+from .pop_ranking import population_ranking, rank_select_rerank, sweep_rank
 from .ssd_scan import state_scan, ssd_state_scan, ssd_state_scan_ref

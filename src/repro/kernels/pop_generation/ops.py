@@ -41,7 +41,9 @@ BACKENDS = ("auto", "kernel", "interpret", "ref", "phases")
 
 def _generation_kernel(problem, state, interpret: bool):
     """Megakernel path: parent gather in XLA, variation+fitness fused in
-    one pallas_call, ranking in XLA — all inside the caller's jit."""
+    one pallas_call, ranking in XLA (through the ``pop_ranking``
+    dispatcher, honouring ``GAConfig.ranking_backend``) — all inside the
+    caller's jit."""
     from ...core import engine  # lazy: engine dispatches back into us
 
     cfg = problem.cfg
@@ -78,7 +80,8 @@ def _generation_kernel(problem, state, interpret: bool):
     c_obj, c_viol = engine.objectives(
         problem, children, engine.counts_accuracy(problem, child_counts))
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key,
-                            state.cache, jnp.int32(P), jnp.int32(0))
+                            state.cache, jnp.int32(P), jnp.int32(0),
+                            backend=cfg.ranking_backend)
 
 
 def population_generation(problem, state, *, backend=None):

@@ -22,21 +22,21 @@ import jax
 import jax.numpy as jnp
 
 from ...core.dedup import dedup_eval
-from ...core.nsga2 import (dominance_matrix, ranking_from_dom,
-                           subset_ranking, survivor_select)
+from ..pop_ranking import rank_select_rerank
 from ..pop_variation import population_variation
 
 
 def _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
-                     n_eval, n_hit):
-    """Shared (μ+λ) tail: rank the pool, keep the best P, emit aux."""
+                     n_eval, n_hit, backend=None):
+    """Shared (μ+λ) tail: rank the pool, keep the best P, emit aux.
+
+    The ranking itself goes through the ``pop_ranking`` dispatcher —
+    the O(P log P) sweep by default, the dominance-matrix oracle on
+    ``backend="matrix"`` — with bit-identical survivors either way."""
     P = state.pop.shape[0]
     obj = jnp.concatenate([state.obj, c_obj], axis=0)
     viol = jnp.concatenate([state.viol, c_viol], axis=0)
-    dom = dominance_matrix(obj, viol)
-    rank, crowd = ranking_from_dom(dom, obj)
-    keep = survivor_select(rank, crowd, P)
-    rank2, crowd2 = subset_ranking(dom, obj, keep)
+    keep, rank2, crowd2 = rank_select_rerank(obj, viol, P, backend=backend)
     new = type(state)(pop[keep], obj[keep], viol[keep], rank2, crowd2,
                       counts[keep], key, state.gen + 1, cache)
     aux = (new.obj[:, 0].min(), new.obj[:, 1].min(), n_eval, n_hit)
@@ -84,4 +84,4 @@ def pop_generation_jnp(problem, state, use_cache: bool = True):
         c_obj, c_viol = engine.fitness(problem, children)
         n_eval = jnp.int32(P)
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
-                            n_eval, n_hit)
+                            n_eval, n_hit, backend=cfg.ranking_backend)

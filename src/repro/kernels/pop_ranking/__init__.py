@@ -1,0 +1,2 @@
+from .ops import population_ranking, rank_select_rerank, BACKENDS
+from .sweep import sweep_rank, sweep_ranking

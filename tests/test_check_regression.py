@@ -1,0 +1,64 @@
+"""The bench-regression gate's comparison logic: absolute floors are
+unconditional, relative gates only apply when baseline and fresh runs
+recorded the same core count (in-process ratios cancel runner *speed*,
+not runner *shape* — see benchmarks/check_regression.py)."""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (ABSOLUTE_FLOORS, GATED_SPEEDUPS,
+                                         check)
+
+
+def _full(value, cpu_count=1):
+    d = {k: value for k in GATED_SPEEDUPS}
+    for k, floor in ABSOLUTE_FLOORS.items():
+        d[k] = max(value, floor)
+    d["cpu_count"] = cpu_count
+    return d
+
+
+def test_ranking_speedup_is_gated():
+    assert "ranking_speedup_vs_matrix" in GATED_SPEEDUPS
+    assert ABSOLUTE_FLOORS["ranking_speedup_vs_matrix"] == 2.0
+
+
+def test_pass_when_equal():
+    failures, _ = check(_full(3.0), _full(3.0), 0.20)
+    assert failures == []
+
+
+def test_relative_regression_fails_on_matching_cores():
+    failures, _ = check(_full(3.0), _full(2.1), 0.20)
+    assert failures, "a >20% drop on matching core counts must fail"
+
+
+def test_relative_regression_skipped_on_core_mismatch():
+    failures, lines = check(_full(3.0, cpu_count=4), _full(2.1, cpu_count=1),
+                            0.20)
+    assert failures == [], "different core counts must not fail relative gates"
+    assert any("SKIP" in ln for ln in lines)
+    assert any("cpu_count" in ln for ln in lines)
+
+
+def test_relative_regression_skipped_on_legacy_baseline():
+    base = _full(3.0)
+    del base["cpu_count"]          # baselines committed before the field
+    failures, _ = check(base, _full(2.1), 0.20)
+    assert failures == []
+
+
+def test_absolute_floor_unconditional():
+    fresh = _full(3.0, cpu_count=1)
+    fresh["ranking_speedup_vs_matrix"] = 1.5   # below the 2.0 floor
+    failures, _ = check(_full(3.0, cpu_count=4), fresh, 0.20)
+    assert any("ranking_speedup_vs_matrix" in f for f in failures), \
+        "absolute floors must fail even when core counts differ"
+
+
+def test_missing_fresh_key_fails():
+    fresh = _full(3.0)
+    del fresh["ranking_speedup_vs_matrix"]
+    failures, _ = check(_full(3.0), fresh, 0.20)
+    assert any("missing" in f for f in failures)
