@@ -29,8 +29,9 @@ runner *shape* — the batched/vmapped rows (and anything whose two sides
 parallelise differently) skew hard when a baseline recorded on an N-core
 box is compared against a fresh run on an M-core one. When the recorded
 ``cpu_count`` values differ (or the baseline predates the field), the
-relative gates are reported but do not fail; the ABSOLUTE_FLOORS still
-apply unconditionally — they encode acceptance bars, not history.
+relative gates are reported but do not fail; the ABSOLUTE_FLOORS and
+ABSOLUTE_CEILINGS still apply unconditionally — they encode acceptance
+bars, not history.
 """
 from __future__ import annotations
 
@@ -57,6 +58,16 @@ GATED_SPEEDUPS = (
 ABSOLUTE_FLOORS = {
     "trainer_dedup_on_speedup_vs_seed": 6.0,
     "ranking_speedup_vs_matrix": 2.0,
+}
+
+# Ceilings gate lower-is-better ratios the same unconditional way the
+# floors gate speedups. ``mc_k8_overhead_vs_k1`` is the device-variation
+# MC-fitness acceptance bar: evaluating K=8 perturbed instances in ONE
+# batched dispatch must cost less than 8 sequential single-instance
+# dispatches of the same work (< 1.0); if batching the instance axis ever
+# costs more than re-dispatching, the MC fitness path has rotted.
+ABSOLUTE_CEILINGS = {
+    "mc_k8_overhead_vs_k1": 1.0,
 }
 
 
@@ -95,6 +106,19 @@ def check(baseline: dict, fresh: dict, max_regression: float):
                      f"(floor {floor:.2f}x at -{max_regression:.0%})")
         if new < floor:
             failures.append(f"{key}: {new:.2f}x < {floor:.2f}x")
+    for key, ceiling in ABSOLUTE_CEILINGS.items():
+        if key not in fresh:
+            failures.append(f"{key}: missing from fresh results")
+            lines.append(f"FAIL {key}: not measured by this run")
+            continue
+        new = float(fresh[key])
+        if new >= ceiling:
+            lines.append(f"FAIL {key}: {new:.2f}x >= absolute ceiling "
+                         f"{ceiling:.2f}x")
+            failures.append(f"{key}: {new:.2f}x >= absolute {ceiling:.2f}x")
+        else:
+            lines.append(f"PASS {key}: {new:.2f}x < absolute ceiling "
+                         f"{ceiling:.2f}x")
     return failures, lines
 
 

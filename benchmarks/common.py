@@ -15,15 +15,11 @@ import time
 
 import numpy as np
 
-from repro.core import (GAConfig,
-                        GATrainer,
-                        calibrated_seeds,
-                        exact_bespoke_baseline,
-                        train_float_mlp,
-                        best_within_loss)
-from repro.core import engine, sweep
-from repro.core.genome import MLPTopology, GenomeSpec
-from repro.core.area import HardwareCost
+from repro.api import (GAConfig, GATrainer, Problem, MLPTopology,
+                       GenomeSpec, HardwareCost, accuracy,
+                       calibrated_seeds, exact_bespoke_baseline,
+                       train_float_mlp, best_within_loss,
+                       run_batch, run_suite, state_at, front_of)
 from repro.data import load_dataset, DATASETS
 
 GA_POP = 64
@@ -150,14 +146,14 @@ def _ga_run_suite(names: tuple, n_seeds: int, pop: int, gens: int,
     problems, dopings = [], []
     for name in names:
         ds, topo, bb, seeds = _ga_setup(name)
-        problems.append(engine.Problem.from_data(
+        problems.append(Problem.from_data(
             topo, ds.x_train, ds.y_train,
             GAConfig(pop_size=pop, generations=gens),
             baseline_acc=bb.accuracy))
         dopings.append(seeds)
     t0 = time.time()
-    result = sweep.run_suite(problems, seed0 + np.arange(n_seeds),
-                             doping_seeds=dopings, names=list(names))
+    result = run_suite(problems, seed0 + np.arange(n_seeds),
+                       doping_seeds=dopings, names=list(names))
     import jax
     jax.block_until_ready(result.states.pop)
     return result, time.time() - t0
@@ -195,24 +191,23 @@ def ga_run_multi(name: str, n_seeds: int | None = None,
 @functools.lru_cache(maxsize=None)
 def _ga_run_multi(name: str, n_seeds: int, pop: int, gens: int, seed0: int):
     ds, topo, bb, seeds = _ga_setup(name)
-    problem = engine.Problem.from_data(
+    problem = Problem.from_data(
         topo, ds.x_train, ds.y_train,
         GAConfig(pop_size=pop, generations=gens),
         baseline_acc=bb.accuracy)
     t0 = time.time()
-    states, _, _ = engine.run_batch(problem, seed0 + np.arange(n_seeds),
-                                    doping_seeds=seeds)
+    states, _, _ = run_batch(problem, seed0 + np.arange(n_seeds),
+                             doping_seeds=seeds)
     import jax
     jax.block_until_ready(states.pop)
     wall = time.time() - t0
-    per_seed = [engine.state_at(states, i) for i in range(n_seeds)]
-    fronts = [engine.front_of(s) for s in per_seed]
+    per_seed = [state_at(states, i) for i in range(n_seeds)]
+    fronts = [front_of(s) for s in per_seed]
     return problem, per_seed, fronts, wall
 
 
 def _point_from_front(name: str, problem, front, max_loss: float):
     import jax.numpy as jnp
-    from repro.core.mlp import accuracy
 
     ds = dataset(name)
     bb = bespoke_baseline(name)

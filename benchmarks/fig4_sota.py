@@ -6,8 +6,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import post_training_approx
-from repro.core.genome import MLPTopology, GenomeSpec
+from repro.api import post_training_approx, MLPTopology, GenomeSpec
 
 from . import common
 from .common import (dataset, float_baseline, bespoke_baseline,

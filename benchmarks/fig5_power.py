@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.area import HardwareCost, EGFET_POWER_SCALE_06V
+from repro.api import HardwareCost, EGFET_POWER_SCALE_06V
 
 from . import common
 from .common import bespoke_baseline, table_ii_point, emit_row

@@ -53,6 +53,15 @@ have a perf trajectory:
                                counts the nominal children·samples
                                workload like the seed row, so the ratio
                                credits skipped rows.
+  * ``mc_fitness``           — device-variation Monte-Carlo fitness: ONE
+                               K-instance batched ``population_correct``
+                               dispatch (``dev=`` (K, G) deltas) vs K
+                               sequential 1-instance dispatches of the
+                               same work; summary ratio
+                               ``mc_k8_overhead_vs_k1`` (< 1.0 = batching
+                               the instance axis beats re-dispatching,
+                               gated as an absolute ceiling in
+                               check_regression).
   * ``fitness_batched_seeds``— an N-seed sweep: N sequential ``GATrainer``
                                runs (one compile each — the pre-engine cost
                                of repeated-run statistics) vs ONE
@@ -86,7 +95,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import GAConfig, GATrainer
+from repro.api import BackendPolicy, GAConfig, GATrainer
+# the per-phase benchmarks time *internals* on purpose — they are the one
+# place allowed to reach under the repro.api facade
 from repro.core import engine, nsga2, sweep
 from repro.core.genome import MLPTopology, GenomeSpec
 from repro.core.mlp import population_accuracy
@@ -137,7 +148,7 @@ def _converged_workload():
 
 def _converged_cfg(dedup, gens: int = 20) -> GAConfig:
     return GAConfig(pop_size=_POP, generations=gens, seed=common.BENCH_SEED,
-                    fitness_backend="ref", dedup=dedup, scan=True,
+                    backends=BackendPolicy(fitness="ref"), dedup=dedup, scan=True,
                     mutation_rate_gene=0.0005, crossover_rate=0.1,
                     doping_frac=1.0)
 
@@ -181,6 +192,61 @@ def bench_fitness_dispatch(results):
         "pop": _POP, "samples": int(xi.shape[0]), "backend": "ref-tiled"}
     emit_row("kernel/fitness_dispatch", dt * 1e6,
              f"chromo_evals_per_s={evals / dt:.0f}|pop={_POP}|backend=ref")
+
+
+def bench_mc_fitness(results, k: int = 8):
+    """Device-variation MC fitness: batched K instances vs K dispatches.
+
+    The batched side is what ``engine.population_counts`` runs under
+    ``variation_mode != "off"``: one ``population_correct`` call with the
+    full (K, G) delta block, amortizing the dataset sweep across all K
+    perturbed instances. The sequential side re-dispatches the same MC
+    evaluation K times with a single-instance delta block — the naive
+    "loop over device samples" structure. Both sides are asserted
+    bit-identical column for column; the gated ratio
+    ``mc_k8_overhead_vs_k1`` = batched / sequential must stay < 1.0
+    (the instance axis must be cheaper batched than re-dispatched)."""
+    ds, topo, spec, pop, xi, labels = _cardio_workload()
+    cfg = GAConfig(pop_size=_POP, variation_mode="mean", n_device_samples=k,
+                   variation_scale=0.2, seed=common.BENCH_SEED,
+                   backends=BackendPolicy(fitness="ref"))
+    problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
+    dev = jax.jit(engine.device_deltas)(problem)
+    high = problem.genes.high
+
+    mc = jax.jit(lambda p, d: population_correct(
+        p, xi, labels, spec=spec, backend="ref", dev=d, gene_high=high))
+
+    def run_seq():
+        # K single-instance dispatches (one compile — same shapes)
+        return [mc(pop, jax.lax.dynamic_slice_in_dim(dev, i, 1))
+                for i in range(k)]
+
+    batched = mc(pop, dev)
+    seq = jnp.concatenate(run_seq(), axis=-1)
+    assert np.array_equal(np.asarray(batched), np.asarray(seq)), \
+        "batched MC counts diverged from sequential per-instance counts"
+
+    # interleaved best-of-repeats (same estimator story as bench_variation)
+    b_ts, s_ts = [], []
+    for _ in range(5):
+        b_ts.append(_time(lambda: mc(pop, dev).block_until_ready(),
+                          iters=10))
+        s_ts.append(_time(
+            lambda: jax.block_until_ready(run_seq()), iters=10))
+    dt_b, dt_s = min(b_ts), min(s_ts)
+    overhead = dt_b / dt_s
+    evals = k * _POP * xi.shape[0]
+    results["mc_fitness"] = {
+        "mc_fitness_us_per_gen": dt_b * 1e6,
+        "sequential_us_per_gen": dt_s * 1e6,
+        "chromo_evals_per_s": evals / dt_b,
+        "n_device_samples": k, "pop": _POP, "samples": int(xi.shape[0]),
+        "counts_bit_identical": True, "backend": "ref-mc"}
+    results["mc_k8_overhead_vs_k1"] = overhead
+    emit_row("kernel/mc_fitness", dt_b * 1e6,
+             f"chromo_evals_per_s={evals / dt_b:.0f}|k={k}|pop={_POP}"
+             f"|seq_us={dt_s * 1e6:.0f}|overhead_vs_k1={overhead:.2f}x")
 
 
 def bench_variation(results):
@@ -264,7 +330,7 @@ def bench_phase_breakdown(results):
     which phase dominates before picking a target. The full scanned
     trainer fuses all three; these rows are the unfused upper bound."""
     ds, topo, spec, pop, xi, labels = _cardio_workload()
-    cfg = GAConfig(pop_size=_POP, fitness_backend="ref",
+    cfg = GAConfig(pop_size=_POP, backends=BackendPolicy(fitness="ref"),
                    seed=common.BENCH_SEED)
     problem = engine.Problem.from_data(topo, ds.x_train, ds.y_train, cfg)
     state, _ = jax.jit(lambda p: engine.init_state(
@@ -398,7 +464,7 @@ def bench_fitness_batched(results, n_seeds: int = 8, pop: int = 64,
 
     def cfg(seed):
         return GAConfig(pop_size=pop, generations=gens, seed=seed,
-                        fitness_backend="ref", scan=True)
+                        backends=BackendPolicy(fitness="ref"), scan=True)
 
     t0 = time.time()
     for s in range(common.BENCH_SEED, common.BENCH_SEED + n_seeds):
@@ -446,7 +512,7 @@ def bench_fitness_swept(results, n_seeds: int = 2, pop: int = 64,
 
     def cfg(seed, pm):
         return GAConfig(pop_size=pop, generations=gens, seed=seed,
-                        mutation_rate_gene=pm, fitness_backend="ref",
+                        mutation_rate_gene=pm, backends=BackendPolicy(fitness="ref"),
                         scan=True)
 
     seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
@@ -507,7 +573,7 @@ def bench_fitness_suite(results, n_seeds: int = 2, pop: int = 64,
 
     def cfg(seed):
         return GAConfig(pop_size=pop, generations=gens, seed=seed,
-                        fitness_backend="ref", scan=True)
+                        backends=BackendPolicy(fitness="ref"), scan=True)
 
     seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
     seq_fronts, problems = [], []
@@ -572,6 +638,7 @@ def run():
     results = {}
     bench_fitness_throughput(results)
     bench_fitness_dispatch(results)
+    bench_mc_fitness(results)
     bench_variation(results)
     bench_phase_breakdown(results)
     bench_fitness_trainer(results, dedup=False)
@@ -605,7 +672,9 @@ def run():
           f"4-cell config grid vs sequential: "
           f"{results['swept_configs_speedup_vs_sequential']:.2f}x, "
           f"5-dataset suite vs sequential: "
-          f"{results['suite_speedup_vs_sequential']:.2f}x "
+          f"{results['suite_speedup_vs_sequential']:.2f}x, "
+          f"MC-fitness K=8 batched vs sequential: "
+          f"{results['mc_k8_overhead_vs_k1']:.2f}x "
           f"(→ {_RESULTS_PATH})")
     bench_pow2_packing()
     return results

@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.genome import MLPTopology
-from repro.core.area import HardwareCost
+from repro.api import MLPTopology, HardwareCost
 from . import common
 from .common import dataset, bespoke_baseline, bespoke_baseline_stats, emit_row
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.area import HardwareCost
+from repro.api import HardwareCost
 
 from . import common
 from .common import (bespoke_baseline, table_ii_points, emit_row, mean_std,

@@ -16,8 +16,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import GAConfig, GATrainer
-from repro.core.genome import MLPTopology
+from repro.api import GAConfig, GATrainer, MLPTopology
 
 from . import common
 from .common import (dataset, float_baseline, ga_run_multi, emit_row,

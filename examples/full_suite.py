@@ -17,11 +17,10 @@ import time
 
 import numpy as np
 
-from repro.core import (GAConfig, calibrated_seeds, exact_bespoke_baseline,
-                        train_float_mlp, best_within_loss)
-from repro.core import engine, sweep
-from repro.core.genome import MLPTopology, GenomeSpec
-from repro.core.area import HardwareCost
+from repro.api import (GAConfig, Problem, MLPTopology, GenomeSpec,
+                       HardwareCost, calibrated_seeds,
+                       exact_bespoke_baseline, train_float_mlp,
+                       best_within_loss, run_suite, suite_spec)
 from repro.data import load_dataset, DATASETS
 
 
@@ -37,17 +36,17 @@ def main():
                              ds.y_test, steps=400)
         bb = exact_bespoke_baseline(topo, fm, ds.x_test, ds.y_test)
         baselines[name] = bb
-        problems.append(engine.Problem.from_data(
+        problems.append(Problem.from_data(
             topo, ds.x_train, ds.y_train, cfg, baseline_acc=bb.accuracy))
         dopings.append(calibrated_seeds(GenomeSpec(topo), fm, ds.x_train))
         print(f"{name:>14}: topology {topo.sizes}, baseline "
               f"acc={bb.accuracy:.3f}, {bb.fa_count} FAs")
 
-    print(f"\npadded layout: {sweep.suite_spec(problems).topo.sizes} — "
+    print(f"\npadded layout: {suite_spec(problems).topo.sizes} — "
           f"{len(DATASETS)} datasets × {n_seeds} seeds, one dispatch...")
     t0 = time.time()
-    result = sweep.run_suite(problems, range(n_seeds), doping_seeds=dopings,
-                             names=list(DATASETS))
+    result = run_suite(problems, range(n_seeds), doping_seeds=dopings,
+                       names=list(DATASETS))
     print(f"suite done in {time.time() - t0:.1f}s "
           f"({result.n_cells} cells)\n")
 

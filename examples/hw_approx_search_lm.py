@@ -9,7 +9,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.core.hw_approx_search import LMApproxSearch, FORMATS
+from repro.api import LMApproxSearch, FORMATS
 from repro.data.tokens import synthetic_token_batch
 
 

@@ -15,12 +15,10 @@ import sys
 
 import jax.numpy as jnp
 
-from repro.core import (GAConfig, calibrated_seeds, exact_bespoke_baseline,
-                        train_float_mlp, best_within_loss)
-from repro.core import engine, sweep
-from repro.core.genome import MLPTopology, GenomeSpec
-from repro.core.area import HardwareCost
-from repro.core.mlp import accuracy
+from repro.api import (GAConfig, Problem, MLPTopology, GenomeSpec,
+                       HardwareCost, accuracy, calibrated_seeds,
+                       exact_bespoke_baseline, train_float_mlp,
+                       best_within_loss, run_grid)
 from repro.data import load_dataset
 
 SEEDS = (0, 1)
@@ -43,10 +41,10 @@ def main():
     doping = calibrated_seeds(spec, fm, ds.x_train)
     print(f"exact bespoke baseline: acc={bb.accuracy:.3f} fa={bb.fa_count}")
 
-    problem = engine.Problem.from_data(
+    problem = Problem.from_data(
         topo, ds.x_train, ds.y_train,
         GAConfig(pop_size=48, generations=40), baseline_acc=bb.accuracy)
-    result = sweep.run_grid(problem, SEEDS,
+    result = run_grid(problem, SEEDS,
                             mutation_rates=MUTATION_RATES,
                             crossover_rates=CROSSOVER_RATES,
                             doping_seeds=doping)

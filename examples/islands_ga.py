@@ -18,9 +18,7 @@ import argparse
 
 import jax
 
-from repro.core.islands import run_islands, IslandConfig
-from repro.core.trainer import GAConfig
-from repro.core.genome import MLPTopology
+from repro.api import run_islands, IslandConfig, GAConfig, MLPTopology
 from repro.data import load_dataset
 
 

@@ -4,26 +4,32 @@
 
 float MLP → exact bespoke baseline → NSGA-II hardware-aware training →
 area/accuracy Pareto front → Verilog for the chosen design, then the same
-search repeated over 3 seeds in ONE `engine.run_batch` dispatch (the paper
+search repeated over 3 seeds in ONE `run_batch` dispatch (the paper
 reports statistics over repeated GA runs — this is how to get them without
-N sequential retrains). To sweep GA *hyperparameters* (mutation/crossover
-rates, the accuracy-loss bound) the same one-dispatch way, see
-`sweep.run_grid` in examples/hyperparam_sweep.py — and to run ALL FIVE
-paper datasets/topologies as one padded dispatch (the whole experiment
-table), see `sweep.run_suite` in examples/full_suite.py.
+N sequential retrains), and finally the search rerun under device-variation
+Monte-Carlo fitness (`GAConfig.variation_mode`) to compare robust vs
+nominal fronts. To sweep GA *hyperparameters* (mutation/crossover rates,
+the accuracy-loss bound) the same one-dispatch way, see `run_grid` in
+examples/hyperparam_sweep.py — and to run ALL FIVE paper
+datasets/topologies as one padded dispatch (the whole experiment table),
+see `run_suite` in examples/full_suite.py.
+
+Everything imports through ``repro.api`` — the package's stable public
+surface; scripts should not reach into ``repro.core.*`` internals.
 """
+import dataclasses
 import sys
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (GAConfig, GATrainer, calibrated_seeds,
-                        exact_bespoke_baseline, train_float_mlp,
-                        best_within_loss, emit_verilog)
-from repro.core import engine
-from repro.core.genome import MLPTopology, GenomeSpec
-from repro.core.area import HardwareCost
-from repro.core.mlp import accuracy
+# repro.api is the package's stability boundary — examples import it and
+# nothing deeper (repro.core/* internals may move under it)
+from repro.api import (GAConfig, GATrainer, MLPTopology, GenomeSpec,
+                       HardwareCost, accuracy, calibrated_seeds,
+                       exact_bespoke_baseline, train_float_mlp,
+                       best_within_loss, emit_verilog, run_batch,
+                       state_at, front_of)
 from repro.data import load_dataset
 
 
@@ -46,10 +52,13 @@ def main():
     # chromosomes skip evaluation across the whole run (bit-identical
     # results either way). Knobs: dedup=True|"cache"|"legacy"|False,
     # cache_slots (table size, default 4096, rounded to a power of two),
-    # cache_probes (probe depth), generation_backend ("auto" fuses the
-    # whole generation: Pallas megakernel on TPU, fused jnp elsewhere),
-    # ranking_backend ("auto" = the O(P log P) sweep NSGA-II ranking;
-    # "matrix" selects the O(P²) dominance-matrix oracle — bit-identical).
+    # cache_probes (probe depth). Backend selection is the single
+    # backends=BackendPolicy(fitness=..., variation=..., generation=...,
+    # ranking=...) knob — "auto" everywhere picks the Pallas kernels on
+    # TPU and the tiled/fused jnp paths elsewhere; ranking="matrix"
+    # selects the O(P²) dominance-matrix oracle (bit-identical to the
+    # O(P log P) sweep). The old per-path *_backend kwargs still work
+    # but emit a DeprecationWarning.
     trainer = GATrainer(topo, ds.x_train, ds.y_train,
                         GAConfig(pop_size=64, generations=60),
                         baseline_acc=bb.accuracy, doping_seeds=seeds)
@@ -85,18 +94,34 @@ def main():
 
     # -- repeated-run statistics: 3 seeds, one vmapped dispatch -------------
     n_seeds = 3
-    states, _, _ = engine.run_batch(trainer.problem, np.arange(n_seeds),
-                                    doping_seeds=seeds)
+    states, _, _ = run_batch(trainer.problem, np.arange(n_seeds),
+                             doping_seeds=seeds)
     best_fas = []
     for s in range(n_seeds):
-        front_s = engine.front_of(engine.state_at(states, s))
+        front_s = front_of(state_at(states, s))
         i = best_within_loss(front_s["objectives"], 1 - bb.accuracy, 0.05)
         if i is not None:
             best_fas.append(front_s["objectives"][i, 1])
     if best_fas:
         print(f"\n{len(best_fas)}/{n_seeds} seeds feasible (≤5% loss): "
               f"FA = {np.mean(best_fas):.0f} ± {np.std(best_fas):.0f} "
-              f"(one engine.run_batch dispatch)")
+              f"(one run_batch dispatch)")
+
+    # -- device-variation robustness: rerun the search with the Monte-Carlo
+    # fitness (K perturbed device instances per chromosome; the front
+    # grows a third robust-error column) and compare robust vs nominal ----
+    mc_cfg = dataclasses.replace(trainer.cfg, variation_mode="worst",
+                                 n_device_samples=8, variation_scale=0.2)
+    mc = GATrainer(topo, ds.x_train, ds.y_train, mc_cfg,
+                   baseline_acc=bb.accuracy, doping_seeds=seeds)
+    mc_state, _ = mc.run()
+    mc_front = mc.front(mc_state)
+    print(f"\nrobust front under {mc_cfg.n_device_samples}-instance "
+          f"device variation (scale={mc_cfg.variation_scale}, "
+          f"mode={mc_cfg.variation_mode!r}) — nominal vs worst-instance:")
+    for nom_err, fa, rob_err in mc_front["objectives"][:8]:
+        print(f"  nominal err={nom_err:.3f}  worst-device err={rob_err:.3f}"
+              f"  FA={int(fa):4d}")
 
 
 if __name__ == "__main__":

@@ -112,7 +112,8 @@ def mlp_fa_count(spec: GenomeSpec, genome: jnp.ndarray) -> jnp.ndarray:
     for l, sl in enumerate(spec.layers):
         masks, signs, exps, bias, bshift, _ = spec.layer_params(genome, l)
         per_neuron = jax.vmap(
-            lambda m, s, k, b: neuron_fa_count(m, s, k, b, bshift, sl.in_bits),
+            lambda m, s, k, b, bs=bshift, ib=sl.in_bits:
+                neuron_fa_count(m, s, k, b, bs, ib),
             in_axes=(1, 1, 1, 0),
         )(masks, signs, exps, bias)
         total = total + jnp.sum(per_neuron)

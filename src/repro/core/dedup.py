@@ -101,11 +101,16 @@ class EvalCache:
         return self.vals.shape[0]
 
 
-def cache_init(capacity: int, n_genes: int, probes: int = 4) -> EvalCache:
-    """Empty cache; ``capacity`` is rounded up to a power of two."""
+def cache_init(capacity: int, n_genes: int, probes: int = 4,
+               val_shape: tuple = ()) -> EvalCache:
+    """Empty cache; ``capacity`` is rounded up to a power of two.
+
+    ``val_shape`` is the per-row shape of the cached value — () for the
+    scalar correct count, (K,) for the per-device-instance count vector
+    of the variation-aware fitness (hashing is over rows either way)."""
     cap = 1 << max(1, int(capacity) - 1).bit_length()
     return EvalCache(jnp.zeros((cap, n_genes), jnp.int32),
-                     jnp.zeros((cap,), jnp.int32),
+                     jnp.zeros((cap,) + tuple(val_shape), jnp.int32),
                      jnp.full((cap,), -1, jnp.int32), probes)
 
 

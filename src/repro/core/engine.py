@@ -31,6 +31,7 @@ vmap and shard_map all produce the same states.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 import jax
@@ -45,6 +46,25 @@ from .dedup import EvalCache, cache_init, dedup_eval
 from ..kernels.pop_ranking import population_ranking
 from .pareto import pareto_front
 from ..kernels.pop_mlp import population_correct
+from ..kernels import BackendPolicy
+
+_LEGACY_BACKEND_FIELDS = (("fitness", "fitness_backend"),
+                          ("variation", "variation_backend"),
+                          ("generation", "generation_backend"),
+                          ("ranking", "ranking_backend"))
+_legacy_backend_warned = False
+
+
+def _warn_legacy_backends(fields):
+    global _legacy_backend_warned
+    if _legacy_backend_warned:
+        return
+    _legacy_backend_warned = True
+    warnings.warn(
+        f"GAConfig({', '.join(fields)}=...) is deprecated; pass "
+        "GAConfig(backends=BackendPolicy(...)) instead "
+        "(repro.kernels.BackendPolicy, fields fitness/variation/"
+        "generation/ranking)", DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,21 +78,20 @@ class GAConfig:
     acc_only: bool = False           # Table III "GA" column: no area objective
     seed: int = 0
     log_every: int = 10
-    # -- fitness hot-path knobs (all bit-exact w.r.t. the naive loop) -------
-    fitness_backend: str = "auto"    # auto|kernel|interpret|ref|jnp
-    # variation hot path: auto|kernel|interpret|ref|ops — all bit-identical
-    # (kernels.pop_variation; "ops" is the chained legacy operator oracle)
-    variation_backend: str = "auto"
-    # generation step: auto|kernel|interpret|ref|phases — "kernel" fuses
-    # variation + fitness into one Pallas dispatch (kernels.pop_generation),
-    # "ref" is the fused jnp path with the cross-generation cache (the CPU
-    # fast path), "phases" the per-phase oracle chain. All bit-identical.
-    generation_backend: str = "auto"
-    # NSGA-II survivor ranking: auto|sweep|matrix — "sweep" (the default
-    # behind auto) is the O(P log P) sort-based constrained ranking of
-    # kernels.pop_ranking, "matrix" the O(P²) dominance-matrix oracle.
-    # Bit-identical ranks/crowding/survivors either way.
-    ranking_backend: str = "auto"
+    # -- backend selection --------------------------------------------------
+    # ``backends`` is THE knob: one validated BackendPolicy naming a
+    # backend per dispatch path (fitness auto|kernel|interpret|ref|jnp,
+    # variation auto|kernel|interpret|ref|ops, generation
+    # auto|kernel|interpret|ref|phases, ranking auto|sweep|matrix — every
+    # non-oracle choice bit-identical, see repro.kernels). The four
+    # ``*_backend`` fields below are DEPRECATED aliases: a non-None value
+    # overrides the matching policy field (and warns once), and after
+    # construction they always mirror the resolved policy, so legacy
+    # readers keep working.
+    fitness_backend: str | None = None
+    variation_backend: str | None = None
+    generation_backend: str | None = None
+    ranking_backend: str | None = None
     # population tile — shared by the fitness "ref" backend and the
     # variation Pallas kernel (one knob tiles both hot paths)
     pop_tile: int = 64
@@ -89,6 +108,47 @@ class GAConfig:
     # real lax.cond under vmap (shared n_valid via lax.pmax); never set it
     # on a problem that runs outside that axis.
     batch_axis: str | None = None
+    # -- device-variation Monte-Carlo fitness (robust printed MLPs) ---------
+    # "off" (default; bit-identical to the nominal single-instance path),
+    # "mean" (expected accuracy over the K sampled device instances) or
+    # "worst" (worst-case instance). When on, fitness evaluates every
+    # chromosome on K perturbed devices (engine.device_deltas) and the
+    # objectives grow a third robustness column next to [error, area].
+    variation_mode: str = "off"
+    n_device_samples: int = 8        # K; instance 0 is always nominal
+    # static seed of the SLOT_DEVICE draws — deliberately NOT the run key,
+    # so every run path / seed / lane of a batch sees the same K devices
+    device_seed: int = 0
+    variation_scale: float = 0.2     # default P(an exponent gene shifts ±1)
+    backends: BackendPolicy | None = None
+
+    def __post_init__(self):
+        pol = self.backends if self.backends is not None else BackendPolicy()
+        legacy = {path: getattr(self, field)
+                  for path, field in _LEGACY_BACKEND_FIELDS}
+        given = {path: v for path, v in legacy.items()
+                 if v is not None and v != getattr(pol, path)}
+        if given:
+            _warn_legacy_backends(sorted(f"{p}_backend" for p in given))
+            pol = dataclasses.replace(pol, **given)
+        object.__setattr__(self, "backends", pol)
+        for path, field in _LEGACY_BACKEND_FIELDS:
+            object.__setattr__(self, field, getattr(pol, path))
+        if self.variation_mode not in ("off", "mean", "worst"):
+            raise ValueError(
+                f"unknown GAConfig.variation_mode {self.variation_mode!r}: "
+                "expected 'off', 'mean' or 'worst'")
+        if int(self.n_device_samples) < 1:
+            raise ValueError("GAConfig.n_device_samples must be >= 1, got "
+                             f"{self.n_device_samples}")
+        if not 0.0 <= float(self.variation_scale) <= 1.0:
+            raise ValueError("GAConfig.variation_scale must lie in [0, 1], "
+                             f"got {self.variation_scale}")
+        if self.variation_mode != "off" and pol.fitness == "jnp":
+            raise ValueError(
+                "variation_mode != 'off' needs a count-based fitness "
+                "backend (auto/kernel/interpret/ref): the 'jnp' oracle "
+                "has no device-instance axis")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -152,6 +212,8 @@ class Problem:
     out_mask: jnp.ndarray = None             # (n_out,) int32 valid columns
     inv_n: jnp.ndarray = None                # () float32 = 1 / n_valid_samples
     n_valid_samples: jnp.ndarray = None      # () int32 true (unpadded) S
+    variation_scale: jnp.ndarray = None      # () float32 device-variation
+    #                                          strength (sweepable leaf)
 
     def __post_init__(self):
         if self.crossover_rate is None:
@@ -168,28 +230,35 @@ class Problem:
             self.inv_n = jnp.float32(1.0 / self.labels.shape[0])
         if self.n_valid_samples is None:
             self.n_valid_samples = jnp.int32(self.labels.shape[0])
+        if self.variation_scale is None:
+            self.variation_scale = jnp.float32(self.cfg.variation_scale)
 
     def tree_flatten(self):
         return ((self.x_int, self.labels, self.baseline_acc,
                  self.crossover_rate, self.mutation_rate_gene,
                  self.max_acc_loss, self.genes, self.out_mask,
-                 self.inv_n, self.n_valid_samples), (self.spec, self.cfg))
+                 self.inv_n, self.n_valid_samples, self.variation_scale),
+                (self.spec, self.cfg))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children[:3], *aux, *children[3:])
 
     def with_hypers(self, crossover_rate=None, mutation_rate_gene=None,
-                    max_acc_loss=None, baseline_acc=None) -> "Problem":
+                    max_acc_loss=None, baseline_acc=None,
+                    variation_scale=None) -> "Problem":
         """Replace the swept hyperparameter leaves (None keeps the current
         value); traced replacements are how a sweep builds its cells.
         ``baseline_acc`` is sweepable too — it only enters the violation
         chain, so sweeping it varies the constraint pressure of the
-        feasibility bound without touching the data."""
+        feasibility bound without touching the data. ``variation_scale``
+        sweeps the device-variation strength the same way (it only enters
+        ``device_deltas``)."""
         kw = {k: v for k, v in [("crossover_rate", crossover_rate),
                                 ("mutation_rate_gene", mutation_rate_gene),
                                 ("max_acc_loss", max_acc_loss),
-                                ("baseline_acc", baseline_acc)]
+                                ("baseline_acc", baseline_acc),
+                                ("variation_scale", variation_scale)]
               if v is not None}
         return dataclasses.replace(self, **kw)
 
@@ -198,10 +267,12 @@ class Problem:
         return dataclasses.replace(self, cfg=dataclasses.replace(self.cfg, **kw))
 
     @classmethod
-    def from_data(cls, topo: MLPTopology, x01, labels, cfg: GAConfig = GAConfig(),
+    def from_data(cls, topo: MLPTopology, x01, labels,
+                  cfg: GAConfig | None = None,
                   baseline_acc: float | None = None,
                   spec: GenomeSpec | None = None) -> "Problem":
         """Build from float [0,1] features (chance-level baseline if None)."""
+        cfg = cfg if cfg is not None else GAConfig()
         spec = spec if spec is not None else GenomeSpec(topo)
         x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
         return cls(x_int, jnp.asarray(labels, jnp.int32),
@@ -215,9 +286,14 @@ def dedup_mode(cfg: GAConfig) -> str:
     The "jnp" fitness oracle has no n_valid_rows tile skip — dedup buys
     nothing there, so it is forced off. ``True`` (the default) means the
     cross-generation cached path; ``"legacy"`` keeps the within-generation
-    dedup of earlier revisions; ``False`` evaluates everything.
+    dedup of earlier revisions; ``False`` evaluates everything. Anything
+    else raises (an unknown string used to fall through to "cache"
+    silently).
     """
-    if not cfg.dedup or cfg.fitness_backend == "jnp":
+    if cfg.dedup not in (True, False, "cache", "legacy"):
+        raise ValueError(f"unknown GAConfig.dedup {cfg.dedup!r}: expected "
+                         "True, False, 'cache' or 'legacy'")
+    if not cfg.dedup or cfg.backends.fitness == "jnp":
         return "off"
     return "legacy" if cfg.dedup == "legacy" else "cache"
 
@@ -246,7 +322,7 @@ def pad_problem(problem: Problem, spec_pad: GenomeSpec,
     oracle backend does not (it averages over the padded sample axis), so
     padded problems must use ``ref``/``kernel``/``interpret``/``auto``.
     """
-    if problem.cfg.fitness_backend == "jnp":
+    if problem.cfg.backends.fitness == "jnp":
         raise ValueError("padded problems need a count-based fitness "
                          "backend (ref/kernel/interpret/auto), not 'jnp'")
     inner = problem.spec
@@ -266,13 +342,51 @@ def pad_problem(problem: Problem, spec_pad: GenomeSpec,
     return Problem(x, labels, problem.baseline_acc, spec_pad, problem.cfg,
                    problem.crossover_rate, problem.mutation_rate_gene,
                    problem.max_acc_loss, genes, jnp.asarray(out_mask),
-                   problem.inv_n, problem.n_valid_samples)
+                   problem.inv_n, problem.n_valid_samples,
+                   problem.variation_scale)
 
 
 # -- fitness ----------------------------------------------------------------
 
+def variation_on(cfg: GAConfig) -> bool:
+    """Whether device-variation Monte-Carlo fitness is active."""
+    return cfg.variation_mode != "off"
+
+
+def device_deltas(problem: Problem):
+    """(K, G) int32 exponent perturbations of the K sampled device
+    instances (K = ``cfg.n_device_samples``); row 0 is the nominal device
+    (all zero).
+
+    The draws are gene-addressed — ``genome.gene_uniform`` under
+    ``SLOT_DEVICE``, keyed by the *static* ``GAConfig.device_seed`` rather
+    than the run key — so every run path (trainer / run_batch / run_grid /
+    run_suite / islands), every seed of a batch and every padded suite
+    lane sees the same K devices, and an embedded gene draws the same
+    number as in its unpadded layout. A uniform u maps to −1 when
+    u < scale/2 and +1 when u ≥ 1 − scale/2 (±1 exponent step ≈ the
+    printed resistor leaving its pow2 bin); ``variation_scale`` is a
+    traced Problem leaf, so it sweeps via ``with_hypers`` like
+    ``baseline_acc``. Only valid exponent genes perturb — masks, signs,
+    biases, shifts and padding lanes always get delta 0, which
+    :func:`genome.apply_device_deltas` passes through bit-untouched.
+    """
+    cfg = problem.cfg
+    t = problem.genes
+    key = jax.random.PRNGKey(cfg.device_seed)
+    u = genome_mod.gene_uniform(key, t.ids, cfg.n_device_samples,
+                                slot=genome_mod.SLOT_DEVICE)
+    s = problem.variation_scale
+    delta = (jnp.where(u >= 1.0 - 0.5 * s, 1, 0)
+             - jnp.where(u < 0.5 * s, 1, 0)).astype(jnp.int32)
+    live = problem.spec.is_exp & t.valid
+    delta = jnp.where(live[None, :], delta, 0)
+    return delta.at[0].set(0)
+
+
 def population_counts(problem: Problem, pop, n_valid=None):
-    """(N, G) → (N,) int32 correct counts via the dispatcher.
+    """(N, G) → (N,) int32 correct counts via the dispatcher — or (N, K)
+    per-device-instance counts when device-variation MC fitness is on.
 
     Rows at or past ``n_valid`` land in skipped tiles (dedup fast path)
     and carry unspecified values — callers overwrite them. Dedup caches
@@ -290,11 +404,13 @@ def population_counts(problem: Problem, pop, n_valid=None):
     n_samp = problem.n_valid_samples
     if cfg.batch_axis is not None:
         n_samp = jax.lax.pmax(n_samp, cfg.batch_axis)
+    dev = device_deltas(problem) if variation_on(cfg) else None
     return population_correct(
         pop, problem.x_int, problem.labels, spec=problem.spec,
-        backend=cfg.fitness_backend, pop_tile=cfg.pop_tile,
+        backend=cfg.backends.fitness, pop_tile=cfg.pop_tile,
         sample_tile=cfg.sample_tile, n_valid_rows=n_valid,
-        n_valid_samples=n_samp, out_mask=problem.out_mask)
+        n_valid_samples=n_samp, out_mask=problem.out_mask,
+        dev=dev, gene_high=problem.genes.high)
 
 
 def counts_accuracy(problem: Problem, counts):
@@ -308,8 +424,29 @@ def counts_accuracy(problem: Problem, counts):
 
 
 def objectives(problem: Problem, pop, acc):
-    """(pop, accuracy) → ((N, 2) [error, area], (N,) violation)."""
+    """(pop, accuracy) → ((N, 2) [error, area], (N,) violation).
+
+    Under device-variation MC fitness ``acc`` is (N, K) per-instance
+    accuracy (column 0 nominal) and the result grows a third robustness
+    column: (N, 3) [nominal error, area, robust error] where robust
+    accuracy is the instance mean (``variation_mode="mean"``) or minimum
+    (``"worst"``). The feasibility bound then constrains the *robust*
+    accuracy — a design only counts as feasible if it holds up across the
+    sampled devices. ``pop_ranking`` folds the third column
+    lexicographically, so both ranking backends stay exact."""
     cfg = problem.cfg
+    if acc.ndim == 2:            # device-variation MC: (N, K) instances
+        nom = acc[:, 0]
+        rob = (jnp.mean(acc, axis=-1) if cfg.variation_mode == "mean"
+               else jnp.min(acc, axis=-1))
+        if cfg.acc_only:
+            area = jnp.zeros_like(nom)
+        else:
+            area = population_area(problem.spec, pop).astype(jnp.float32)
+        obj = jnp.stack([1.0 - nom, area, 1.0 - rob], axis=-1)
+        viol = jnp.maximum(0.0, (problem.baseline_acc - rob)
+                           - problem.max_acc_loss)
+        return obj, viol
     if cfg.acc_only:             # conventional GA training (Table III)
         area = jnp.zeros_like(acc)
     else:
@@ -322,7 +459,7 @@ def objectives(problem: Problem, pop, acc):
 
 def fitness(problem: Problem, pop):
     """(N, G) → ((N, 2) objectives, (N,) violation) — non-dedup path."""
-    if problem.cfg.fitness_backend == "jnp":
+    if problem.cfg.backends.fitness == "jnp":
         acc = population_accuracy(problem.spec, pop, problem.x_int,
                                   problem.labels)
     else:
@@ -391,19 +528,21 @@ def init_state(problem: Problem, key, doping_seeds=None,
     key, k_pop = jax.random.split(key)
     pop = initial_population(problem, k_pop, doping_seeds, pop_size)
     cache = None
-    if cfg.fitness_backend == "jnp":
+    if cfg.backends.fitness == "jnp":
         counts = jnp.zeros((pop.shape[0],), jnp.int32)
         n_eval = jnp.int32(pop.shape[0])
         obj, viol = fitness(problem, pop)
     else:
         if dedup_mode(cfg) == "cache":
+            val_shape = ((cfg.n_device_samples,) if variation_on(cfg)
+                         else ())
             cache = cache_init(cfg.cache_slots, problem.genes.low.shape[0],
-                               cfg.cache_probes)
+                               cfg.cache_probes, val_shape=val_shape)
             counts, n_eval, cache = initial_counts(problem, pop, cache)
         else:
             counts, n_eval = initial_counts(problem, pop)
         obj, viol = objectives(problem, pop, counts_accuracy(problem, counts))
-    rank, crowd = population_ranking(obj, viol, backend=cfg.ranking_backend)
+    rank, crowd = population_ranking(obj, viol, backend=cfg.backends.ranking)
     return GAState(pop, obj, viol, rank, crowd, counts, key,
                    jnp.int32(0), cache), n_eval
 

@@ -78,8 +78,10 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
 
     def island_round(problem, pop, obj, viol, counts, rank, crowd, key,
                      *cache_leaves):
-        """Local shard view: pop (island_pop, genes), obj (island_pop, 2),
-        viol/counts/rank/crowd (island_pop,), key (1, 2) uint32 (the
+        """Local shard view: pop (island_pop, genes), obj (island_pop, M)
+        (M = 2, or 3 under device-variation MC fitness),
+        viol/rank/crowd (island_pop,), counts (island_pop,) — or
+        (island_pop, K) per-instance counts — key (1, 2) uint32 (the
         leading shard axis stays — strip it for jax.random), plus the
         island's EvalCache leaves (rows/vals/stamp) in the default dedup
         mode. ``problem`` is replicated (every island sees the full
@@ -123,7 +125,7 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
             # (the degenerate ring keeps the scan's rank/crowd, which equal
             # a recompute bit-for-bit: nsga2.subset_ranking equivalence)
             rank, crowd = population_ranking(
-                obj, viol, backend=cfg.ga.ranking_backend)
+                obj, viol, backend=cfg.ga.backends.ranking)
         out = (pop, obj, viol, counts, rank, crowd, key[None])
         if cache_leaves:    # migrants carry their counts; caches stay local
             out += (state.cache.rows, state.cache.vals, state.cache.stamp)
@@ -154,15 +156,21 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
         states = init_batched(problem, seed,
                               engine._doping_array(doping_seeds))
         P_glob = n_axis * cfg.island_pop
+        # shape-suffix-preserving flattens: obj keeps its M objective
+        # columns and counts its optional K instance axis (device-
+        # variation MC fitness), so each shard sees its local shapes
         carry = (states.pop.reshape(P_glob, -1),
-                 states.obj.reshape(P_glob, 2),
-                 states.viol.reshape(P_glob), states.counts.reshape(P_glob),
+                 states.obj.reshape((P_glob,) + states.obj.shape[2:]),
+                 states.viol.reshape(P_glob),
+                 states.counts.reshape((P_glob,) + states.counts.shape[2:]),
                  states.rank.reshape(P_glob), states.crowd.reshape(P_glob),
                  states.key)
         if cached:   # per-island cache slices stack on the sharded axis
             c = states.cache
             carry += (c.rows.reshape(n_axis * c.rows.shape[1], -1),
-                      c.vals.reshape(-1), c.stamp.reshape(-1))
+                      c.vals.reshape((n_axis * c.vals.shape[1],)
+                                     + c.vals.shape[2:]),
+                      c.stamp.reshape(-1))
         return carry
 
     def round_fn(*carry):
@@ -172,10 +180,11 @@ def build_island_step(spec: GenomeSpec, cfg: IslandConfig, mesh: Mesh,
 
 
 def run_islands(topo: MLPTopology, x01, labels, mesh: Mesh,
-                cfg: IslandConfig = IslandConfig(), baseline_acc: float = 1.0,
+                cfg: IslandConfig | None = None, baseline_acc: float = 1.0,
                 axis_names: tuple[str, ...] = ("data",), seed: int = 0,
                 doping_seeds=None):
     """Drive ``rounds`` migration rounds and return the global Pareto front."""
+    cfg = cfg if cfg is not None else IslandConfig()
     spec = GenomeSpec(topo)
     x_int = quantize_inputs(jnp.asarray(x01, jnp.float32), topo.input_bits)
     labels = jnp.asarray(labels, jnp.int32)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .genome import GenomeSpec
+from .genome import GenomeSpec, apply_device_deltas
 from .quantize import qrelu, quantize_inputs
 
 
@@ -96,6 +96,50 @@ def population_correct_counts(spec: GenomeSpec, pop: jnp.ndarray, x_int,
         pred = jnp.argmax(mask_logits(mlp_forward(spec, g, x_int), out_mask),
                           axis=-1)
         return jnp.sum((pred == labels).astype(jnp.int32))
+
+    return jax.vmap(one)(pop)
+
+
+def population_correct_counts_mc(spec: GenomeSpec, pop: jnp.ndarray, dev,
+                                 gene_high, x_int, labels,
+                                 out_mask=None) -> jnp.ndarray:
+    """(P, n_genes) × (K, n_genes) deltas → (P, K) int32 correct counts.
+
+    Device-variation MC twin of :func:`population_correct_counts`: every
+    chromosome is evaluated under the K perturbed instances
+    ``apply_device_deltas(g, dev[k], gene_high)``. Deltas are zero off the
+    exponent genes (``engine.device_deltas`` masks on ``spec.is_exp``), so
+    masks/signs/biases/shifts — and therefore the layer-1 masked-input
+    tensor ``x & masks`` — are instance-invariant: it is computed ONCE per
+    chromosome and the K statically-unrolled instance forwards reuse it.
+    That shared gather is what makes one batched MC dispatch cheaper than
+    K sequential single-instance dispatches
+    (``benchmarks.kernel_bench.bench_mc_fitness`` gates the ratio).
+    Hidden activations diverge per instance, so every later layer runs per
+    instance. Column k is bit-identical to an independent forward of the
+    perturbed genome; ``dev`` row 0 is all-zero, so column 0 IS the
+    nominal count."""
+    K = dev.shape[0]
+    n = spec.topo.n_layers
+    high = jnp.asarray(gene_high)
+
+    def one(g):
+        pert = apply_device_deltas(g[None, :], dev, high[None, :])  # (K, G)
+        masks, _, _, _, _, _ = spec.layer_params(g, 0)
+        masked = jnp.bitwise_and(x_int[..., :, None], masks)  # (S, I, H)
+        counts = []
+        for k in range(K):
+            _, s, e, b, bs, rs = spec.layer_params(pert[k], 0)
+            acc = (jnp.sum(s * jnp.left_shift(masked, e), axis=-2)
+                   + jnp.left_shift(b, bs))
+            h = acc if n == 1 else qrelu(acc, rs, spec.topo.act_bits)
+            for l in range(1, n):
+                p = spec.layer_params(pert[k], l)
+                h = _layer_forward(h, *p, spec.topo.act_bits,
+                                   is_last=(l == n - 1))
+            pred = jnp.argmax(mask_logits(h, out_mask), axis=-1)
+            counts.append(jnp.sum((pred == labels).astype(jnp.int32)))
+        return jnp.stack(counts)
 
     return jax.vmap(one)(pop)
 

@@ -43,9 +43,11 @@ from .engine import GAConfig, GAState, Problem   # noqa: F401  (re-exported API)
 class GATrainer:
     """Hardware-aware NSGA-II trainer for one (topology, dataset) pair."""
 
-    def __init__(self, topo: MLPTopology, x01, labels, cfg: GAConfig = GAConfig(),
+    def __init__(self, topo: MLPTopology, x01, labels,
+                 cfg: GAConfig | None = None,
                  baseline_acc: float | None = None,
                  doping_seeds: Optional[Sequence[np.ndarray]] = None):
+        cfg = cfg if cfg is not None else GAConfig()
         self.topo = topo
         self.cfg = cfg
         # chance-level baseline if no float model is supplied

@@ -1,7 +1,15 @@
 """Pallas TPU kernels for the perf-critical compute layers, each with a
 pure-jnp oracle (ref.py) and a jit'd dispatch wrapper (ops.py). Validated in
 interpret mode on CPU; compiled Mosaic on TPU.
+
+This package is also the single authority on *backend selection*:
+:class:`BackendPolicy` names one backend per dispatch path (fitness /
+variation / generation / ranking) and validates the names against each
+path's ``BACKENDS`` tuple at construction — so a typo'd backend fails
+when the ``GAConfig`` is built, not at trace time deep inside a jit.
 """
+import dataclasses
+
 from .pow2_matmul import pow2_linear, pow2_matmul, pow2_matmul_ref, pack_weights
 from .flash_attention import causal_attention, flash_attention, flash_attention_ref
 from .pop_mlp import population_correct, pop_mlp_correct, pop_mlp_correct_ref
@@ -9,3 +17,59 @@ from .pop_variation import population_variation, pop_variation_kernel, pop_varia
 from .pop_generation import population_generation, pop_generation_kernel, pop_generation_jnp
 from .pop_ranking import population_ranking, rank_select_rerank, sweep_rank
 from .ssd_scan import state_scan, ssd_state_scan, ssd_state_scan_ref
+
+from .pop_mlp.ops import BACKENDS as FITNESS_BACKENDS
+from .pop_variation.ops import BACKENDS as VARIATION_BACKENDS
+from .pop_generation.ops import BACKENDS as GENERATION_BACKENDS
+from .pop_ranking.ops import BACKENDS as RANKING_BACKENDS
+
+BACKEND_CHOICES = {
+    "fitness": FITNESS_BACKENDS,
+    "variation": VARIATION_BACKENDS,
+    "generation": GENERATION_BACKENDS,
+    "ranking": RANKING_BACKENDS,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendPolicy:
+    """One validated backend name per dispatch path.
+
+    The replacement for the four stringly-typed ``GAConfig.*_backend``
+    knobs: ``GAConfig(backends=BackendPolicy(fitness="ref"))``. Every
+    field defaults to ``"auto"`` (Pallas kernel on TPU, fused jnp
+    elsewhere); unknown names raise ``ValueError`` here, at construction.
+    The old kwargs still work as deprecated aliases that populate this
+    policy (``GAConfig.__post_init__``).
+    """
+
+    fitness: str = "auto"
+    variation: str = "auto"
+    generation: str = "auto"
+    ranking: str = "auto"
+
+    def __post_init__(self):
+        for path, choices in BACKEND_CHOICES.items():
+            name = getattr(self, path)
+            if name not in choices:
+                raise ValueError(
+                    f"unknown {path} backend {name!r}: expected one of "
+                    f"{choices}")
+
+
+def resolve_backends(policy=None, **overrides) -> BackendPolicy:
+    """THE resolver from loose backend names to a validated policy.
+
+    ``policy``: an existing :class:`BackendPolicy` (or None for all-auto).
+    ``overrides``: per-path names (``fitness=…``, ``ranking=…``, …); a
+    ``None`` override means "keep the policy's choice". Unknown path or
+    backend names raise ``ValueError``. Returns a (possibly new) frozen
+    ``BackendPolicy``.
+    """
+    base = policy if policy is not None else BackendPolicy()
+    bad = set(overrides) - set(BACKEND_CHOICES)
+    if bad:
+        raise ValueError(f"unknown backend paths {sorted(bad)}: expected "
+                         f"a subset of {sorted(BACKEND_CHOICES)}")
+    kept = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(base, **kept) if kept else base

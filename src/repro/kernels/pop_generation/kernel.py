@@ -37,8 +37,11 @@ from ..pop_variation.kernel import _slot_uniform
 
 def _kernel(a_ref, b_ref, do_ref, low_ref, high_ref, ismask_ref, bits_ref,
             ids_ref, keys_ref, pm_ref, x_ref, y_ref, samp_ref, om_ref,
-            child_ref, cnt_ref, *, spec: GenomeSpec, bp: int, half: int,
-            bs: int, n_valid: int):
+            *refs, spec: GenomeSpec, bp: int, half: int,
+            bs: int, n_valid: int, n_dev: int | None = None):
+    # trailing refs: [dev_ref] (device-variation MC only), child_ref, cnt_ref
+    dev_ref = refs[0] if n_dev is not None else None
+    child_ref, cnt_ref = refs[-2], refs[-1]
     # program_id must stay outside the traced-cond bodies: the interpret-mode
     # impl only substitutes it at kernel top level (see pop_mlp.kernel)
     row_start = pl.program_id(0) * bp
@@ -76,15 +79,34 @@ def _kernel(a_ref, b_ref, do_ref, low_ref, high_ref, ismask_ref, bits_ref,
     # suite fast path: all-padding sample tiles (label −1) are skipped
     @pl.when(start < samp_ref[0, 0])
     def _fitness():
-        logits = _forward_block(child_ref[...], x_ref[...], spec)
-        logits = jnp.where(om_ref[...][:, None, :] > 0, logits,
-                           jnp.iinfo(jnp.int32).min)
-        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (bp, bs)
-        correct = (pred == y_ref[...][:, 0][None, :]).astype(jnp.int32)
-        valid = (start + jax.lax.broadcasted_iota(jnp.int32, correct.shape, 1)
+        y = y_ref[...][:, 0][None, :]
+        om = om_ref[...][:, None, :] > 0
+        valid = (start + jax.lax.broadcasted_iota(jnp.int32, (bp, bs), 1)
                  ) < n_valid
-        cnt_ref[...] += jnp.sum(jnp.where(valid, correct, 0), axis=1,
-                                keepdims=True)
+        if n_dev is None:
+            logits = _forward_block(child_ref[...], x_ref[...], spec)
+            logits = jnp.where(om, logits, jnp.iinfo(jnp.int32).min)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (bp, bs)
+            correct = (pred == y).astype(jnp.int32)
+            cnt_ref[...] += jnp.sum(jnp.where(valid, correct, 0), axis=1,
+                                    keepdims=True)
+            return
+        # device-variation MC: the child block stays resident in VMEM
+        # while the K perturbed instances each rerun the forward pass
+        # (same unrolled loop as pop_mlp._kernel_mc)
+        child = child_ref[...]
+        hi = high_ref[...]                                       # (1, G)
+        dev = dev_ref[...]
+        cols = []
+        for k in range(n_dev):
+            d = dev[k][None, :]                                  # (1, G)
+            gk = jnp.where(d == 0, child, jnp.clip(child + d, 0, hi - 1))
+            logits = _forward_block(gk, x_ref[...], spec)
+            logits = jnp.where(om, logits, jnp.iinfo(jnp.int32).min)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            correct = (pred == y).astype(jnp.int32)
+            cols.append(jnp.sum(jnp.where(valid, correct, 0), axis=1))
+        cnt_ref[...] += jnp.stack(cols, axis=-1)
 
 
 @functools.partial(jax.jit,
@@ -94,7 +116,7 @@ def pop_generation_kernel(a_rows, b_rows, do_rows, table_low, table_high,
                           slot_keys, pm_gene, x_int, labels, *,
                           spec: GenomeSpec, bp: int = 8, bs: int = 128,
                           interpret: bool = False, n_valid_samples=None,
-                          out_mask=None):
+                          out_mask=None, dev=None):
     """Pre-gathered parent frames + dataset → (children, correct counts).
 
     a_rows/b_rows: (P, G) int32 no-swap / swap sources per child row (the
@@ -105,7 +127,12 @@ def pop_generation_kernel(a_rows, b_rows, do_rows, table_low, table_high,
     x_int/labels: (S, n_in)/(S,) — the quantized dataset.
     n_valid_samples/out_mask: the suite-padding bounds of
         ``pop_mlp.pop_mlp_correct``.
-    Returns ((P, G) int32 children, (P,) int32 correct counts).
+    dev: optional (K, G) int32 device-variation deltas
+        (``engine.device_deltas``) — the counts output then grows a K
+        instance axis, the perturbed exponents clipped against the
+        ``table_high`` bounds already on board.
+    Returns ((P, G) int32 children, (P,) — or (P, K) with ``dev`` —
+    int32 correct counts).
     """
     P, G = a_rows.shape
     half = P // 2
@@ -128,9 +155,14 @@ def pop_generation_kernel(a_rows, b_rows, do_rows, table_low, table_high,
           else jnp.asarray(out_mask, jnp.int32).reshape(1, n_out))
     row2d = lambda arr: jnp.asarray(arr, jnp.int32).reshape(-1, 1)
     gene2d = lambda arr, dt: jnp.asarray(arr, dt).reshape(1, G)
+    n_dev = None if dev is None else dev.shape[0]
+    nc = 1 if n_dev is None else n_dev
+    dev_specs = ([] if n_dev is None
+                 else [pl.BlockSpec((n_dev, G), lambda i, j: (0, 0))])
+    dev_ops = () if n_dev is None else (jnp.asarray(dev, jnp.int32),)
     children, counts = pl.pallas_call(
         functools.partial(_kernel, spec=spec, bp=bp, half=half, bs=bs,
-                          n_valid=S),
+                          n_valid=S, n_dev=n_dev),
         grid=((P + pad_p) // bp, n_s),
         in_specs=[
             pl.BlockSpec((bp, G), lambda i, j: (i, 0)),     # a_rows
@@ -147,16 +179,17 @@ def pop_generation_kernel(a_rows, b_rows, do_rows, table_low, table_high,
             pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),     # labels (2-D)
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),      # n_valid_samples
             pl.BlockSpec((1, n_out), lambda i, j: (0, 0)),  # output-col mask
+            *dev_specs,                                     # device deltas
         ],
         out_specs=[pl.BlockSpec((bp, G), lambda i, j: (i, 0)),
-                   pl.BlockSpec((bp, 1), lambda i, j: (i, 0))],
+                   pl.BlockSpec((bp, nc), lambda i, j: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((P + pad_p, G), jnp.int32),
-                   jax.ShapeDtypeStruct((P + pad_p, 1), jnp.int32)],
+                   jax.ShapeDtypeStruct((P + pad_p, nc), jnp.int32)],
         interpret=interpret,
     )(a_rows, b_rows, row2d(do_rows), gene2d(table_low, jnp.int32),
       gene2d(table_high, jnp.int32), gene2d(table_is_mask, jnp.int32),
       gene2d(table_mask_bits, jnp.int32), gene2d(table_ids, jnp.uint32),
       jnp.asarray(slot_keys, jnp.uint32),
       jnp.asarray(pm_gene, jnp.float32).reshape(1, 1),
-      x_int, labels[:, None], samp, om)
-    return children[:P], counts[:P, 0]
+      x_int, labels[:, None], samp, om, *dev_ops)
+    return children[:P], (counts[:P, 0] if n_dev is None else counts[:P])

@@ -65,33 +65,34 @@ def _generation_kernel(problem, state, interpret: bool):
     n_samp = problem.n_valid_samples
     if cfg.batch_axis is not None:
         n_samp = jax.lax.pmax(n_samp, cfg.batch_axis)
+    dev = engine.device_deltas(problem) if engine.variation_on(cfg) else None
     children, child_counts = pop_generation_kernel(
         a_rows, b_rows, do_rows, t.low, t.high, t.is_mask, t.mask_bits,
         t.ids, _slot_keys(k_var, _VARIATION_SLOTS),
         problem.mutation_rate_gene, problem.x_int, problem.labels,
         spec=problem.spec, bp=min(cfg.pop_tile, 8),
         bs=min(cfg.sample_tile, 128), interpret=interpret,
-        n_valid_samples=n_samp, out_mask=problem.out_mask)
+        n_valid_samples=n_samp, out_mask=problem.out_mask, dev=dev)
     pop = jnp.concatenate([state.pop, children], axis=0)
     if engine.dedup_mode(cfg) != "off":
         counts = jnp.concatenate([state.counts, child_counts])
     else:
-        counts = jnp.zeros((2 * P,), jnp.int32)
+        counts = jnp.zeros((2 * P,) + state.counts.shape[1:], jnp.int32)
     c_obj, c_viol = engine.objectives(
         problem, children, engine.counts_accuracy(problem, child_counts))
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key,
                             state.cache, jnp.int32(P), jnp.int32(0),
-                            backend=cfg.ranking_backend)
+                            backend=cfg.backends.ranking)
 
 
 def population_generation(problem, state, *, backend=None):
     """(Problem, GAState) → (new GAState, aux) — ONE (μ+λ) generation.
 
     aux = (best_err, best_area, n_eval, n_hit). ``backend`` overrides
-    ``problem.cfg.generation_backend``.
+    ``problem.cfg.backends.generation``.
     """
     if backend is None:
-        backend = problem.cfg.generation_backend
+        backend = problem.cfg.backends.generation
     if backend is None or backend == "auto":
         backend = "kernel" if jax.default_backend() == "tpu" else "ref"
     if backend == "ref":

@@ -56,7 +56,7 @@ def pop_generation_jnp(problem, state, use_cache: bool = True):
     children = population_variation(
         k_off, state.pop, state.rank, state.crowd, genes=problem.genes,
         pc=problem.crossover_rate, pm=problem.mutation_rate_gene,
-        backend=cfg.variation_backend, pop_tile=cfg.pop_tile)
+        backend=cfg.backends.variation, pop_tile=cfg.pop_tile)
     pop = jnp.concatenate([state.pop, children], axis=0)
 
     mode = engine.dedup_mode(cfg)
@@ -80,8 +80,10 @@ def pop_generation_jnp(problem, state, use_cache: bool = True):
         c_obj, c_viol = engine.objectives(
             problem, children, engine.counts_accuracy(problem, counts[P:]))
     else:
-        counts = jnp.zeros((2 * P,), jnp.int32)
+        # dedup off: counts are unused placeholders — match the state's
+        # count shape, which grows a K column under device-variation MC
+        counts = jnp.zeros((2 * P,) + state.counts.shape[1:], jnp.int32)
         c_obj, c_viol = engine.fitness(problem, children)
         n_eval = jnp.int32(P)
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
-                            n_eval, n_hit, backend=cfg.ranking_backend)
+                            n_eval, n_hit, backend=cfg.backends.ranking)

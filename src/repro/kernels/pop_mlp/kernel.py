@@ -142,3 +142,96 @@ def pop_mlp_correct(pop: jnp.ndarray, x_int: jnp.ndarray, labels: jnp.ndarray,
         interpret=interpret,
     )(pop, x_int, labels[:, None], rows, samp, om)
     return out[:P, 0]
+
+
+def _kernel_mc(genome_ref, x_ref, y_ref, dev_ref, hi_ref, rows_ref, samp_ref,
+               om_ref, o_ref, *, spec: GenomeSpec, n_valid: int, bs: int,
+               bp: int, n_dev: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row_start = pl.program_id(0) * bp
+    start = pl.program_id(1) * bs
+
+    @pl.when((row_start < rows_ref[0, 0]) & (start < samp_ref[0, 0]))
+    def _compute():
+        g = genome_ref[...]
+        x = x_ref[...]
+        y = y_ref[...][:, 0][None, :]
+        dev = dev_ref[...]
+        hi = hi_ref[...]                                        # (1, G)
+        om = om_ref[...][:, None, :] > 0
+        valid = (start + jax.lax.broadcasted_iota(jnp.int32, (bp, bs), 1)
+                 ) < n_valid
+        cols = []
+        # static unroll over the K device instances: each perturbs the
+        # genome block in registers and reruns the forward pass — the
+        # input/label blocks are loaded once for all K
+        for k in range(n_dev):
+            d = dev[k][None, :]                                 # (1, G)
+            gk = jnp.where(d == 0, g, jnp.clip(g + d, 0, hi - 1))
+            logits = _forward_block(gk, x, spec)
+            logits = jnp.where(om, logits, jnp.iinfo(jnp.int32).min)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            correct = (pred == y).astype(jnp.int32)
+            cols.append(jnp.sum(jnp.where(valid, correct, 0), axis=1))
+        o_ref[...] += jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bp", "bs", "interpret"))
+def pop_mlp_correct_mc(pop: jnp.ndarray, x_int: jnp.ndarray,
+                       labels: jnp.ndarray, dev: jnp.ndarray,
+                       gene_high: jnp.ndarray, *, spec: GenomeSpec,
+                       bp: int = 8, bs: int = 128, interpret: bool = False,
+                       n_valid_rows=None, n_valid_samples=None,
+                       out_mask=None) -> jnp.ndarray:
+    """Device-variation MC fitness: (P, G) × (K, G) deltas → (P, K) counts.
+
+    The Pallas twin of ``ref.pop_mlp_correct_mc``: same grid and tile
+    skips as :func:`pop_mlp_correct`, but the delta table (one (K, G)
+    block broadcast to every grid step) and the per-gene exclusive upper
+    bounds ride along, the instance axis is statically unrolled inside
+    the kernel, and the output block grows to (bp, K). Column 0 is the
+    nominal device (all-zero delta row — ``engine.device_deltas``).
+    """
+    P, G = pop.shape
+    S = x_int.shape[0]
+    K = dev.shape[0]
+    n_out = spec.topo.sizes[-1]
+    bp = min(bp, P)
+    pad_p = (bp - P % bp) % bp
+    if pad_p:                     # zero rows are valid genomes; counts dropped
+        pop = jnp.pad(pop, ((0, pad_p), (0, 0)))
+    pad_s = (bs - S % bs) % bs
+    if pad_s:
+        x_int = jnp.pad(x_int, ((0, pad_s), (0, 0)))
+        labels = jnp.pad(labels, (0, pad_s), constant_values=-1)
+    n_s = (S + pad_s) // bs
+    rows = jnp.full((1, 1), P if n_valid_rows is None else n_valid_rows,
+                    jnp.int32)
+    samp = jnp.full((1, 1), S if n_valid_samples is None else n_valid_samples,
+                    jnp.int32)
+    om = (jnp.ones((1, n_out), jnp.int32) if out_mask is None
+          else jnp.asarray(out_mask, jnp.int32).reshape(1, n_out))
+    hi = jnp.asarray(gene_high, jnp.int32).reshape(1, G)
+    out = pl.pallas_call(
+        functools.partial(_kernel_mc, spec=spec, n_valid=S, bs=bs, bp=bp,
+                          n_dev=K),
+        grid=((P + pad_p) // bp, n_s),
+        in_specs=[
+            pl.BlockSpec((bp, G), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, x_int.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),    # 2-D for Mosaic
+            pl.BlockSpec((K, G), lambda i, j: (0, 0)),     # device deltas
+            pl.BlockSpec((1, G), lambda i, j: (0, 0)),     # gene upper bounds
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n_out), lambda i, j: (0, 0)),  # output-col mask
+        ],
+        out_specs=pl.BlockSpec((bp, K), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P + pad_p, K), jnp.int32),
+        interpret=interpret,
+    )(pop, x_int, labels[:, None], dev, hi, rows, samp, om)
+    return out[:P]

@@ -30,8 +30,9 @@ from __future__ import annotations
 
 import jax
 
-from .kernel import pop_mlp_correct
-from .ref import pop_mlp_correct_ref, pop_mlp_correct_tiled
+from .kernel import pop_mlp_correct, pop_mlp_correct_mc
+from .ref import (pop_mlp_correct_ref, pop_mlp_correct_tiled,
+                  pop_mlp_correct_mc as pop_mlp_correct_mc_ref)
 
 BACKENDS = ("auto", "kernel", "interpret", "ref", "jnp")
 
@@ -40,8 +41,15 @@ def population_correct(pop, x_int, labels, *, spec, backend=None,
                        use_kernel=None, interpret=None,
                        pop_tile: int = 64, sample_tile: int = 256,
                        n_valid_rows=None, n_valid_samples=None,
-                       out_mask=None):
+                       out_mask=None, dev=None, gene_high=None):
     """(P, G) × (S, n_in) × (S,) → (P,) int32 correct counts.
+
+    With ``dev`` ((K, G) int32 device-variation deltas,
+    ``engine.device_deltas``) every chromosome is evaluated on all K
+    perturbed device instances in one dispatch and the result is (P, K)
+    per-instance counts instead; ``gene_high`` ((G,) exclusive upper
+    bounds) bounds the perturbed exponents per gene. The "jnp" oracle has
+    no instance axis and rejects ``dev``.
 
     ``use_kernel``/``interpret`` are the legacy knobs (pre-dispatcher API)
     and take precedence over ``backend`` when given."""
@@ -51,6 +59,27 @@ def population_correct(pop, x_int, labels, *, spec, backend=None,
             interpret = jax.default_backend() != "tpu"
     if backend is None or backend == "auto":
         backend = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if dev is not None:
+        if backend == "jnp":
+            raise ValueError("the 'jnp' fitness oracle has no "
+                             "device-instance axis; use ref/kernel/"
+                             "interpret/auto for dev != None")
+        if gene_high is None:
+            raise ValueError("dev needs gene_high (per-gene exclusive "
+                             "upper bounds, GeneTable.high)")
+        if backend == "kernel" or backend == "interpret":
+            return pop_mlp_correct_mc(
+                pop, x_int, labels, dev, gene_high, spec=spec,
+                bp=min(pop_tile, 8), bs=min(sample_tile, 128),
+                interpret=(backend == "interpret" if interpret is None
+                           else interpret),
+                n_valid_rows=n_valid_rows, n_valid_samples=n_valid_samples,
+                out_mask=out_mask)
+        return pop_mlp_correct_mc_ref(
+            pop, x_int, labels, spec=spec, dev=dev, gene_high=gene_high,
+            pop_tile=pop_tile, sample_tile=sample_tile,
+            n_valid_rows=n_valid_rows, n_valid_samples=n_valid_samples,
+            out_mask=out_mask)
     if backend == "kernel" or backend == "interpret":
         return pop_mlp_correct(
             pop, x_int, labels, spec=spec, bp=min(pop_tile, 8),

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from ...core.genome import GenomeSpec
-from ...core.mlp import population_accuracy, population_correct_counts
+from ...core.mlp import (population_accuracy, population_correct_counts,
+                         population_correct_counts_mc)
 
 
 def pop_mlp_correct_ref(pop, x_int, labels, *, spec: GenomeSpec,
@@ -101,3 +102,80 @@ def pop_mlp_correct_tiled(pop, x_int, labels, *, spec: GenomeSpec,
 
         _, counts = lax.scan(step, 0, (tiles, starts))
     return counts.reshape(-1)[:P]
+
+
+def pop_mlp_correct_mc(pop, x_int, labels, *, spec: GenomeSpec, dev,
+                       gene_high, pop_tile: int = 64, sample_tile: int = 256,
+                       n_valid_rows=None, n_valid_samples=None,
+                       out_mask=None):
+    """Device-variation MC counts: (P, G) × (K, G) deltas → (P, K) int32.
+
+    Tiled exactly like ``pop_mlp_correct_tiled`` — population tiles of
+    ``pop_tile`` chromosomes, sample tiles scanned, the same pmax-bounded
+    ``lax.cond`` row/sample skips (``n_valid_rows`` counts *chromosomes*;
+    every instance of a skipped chromosome is skipped) — but the tile
+    body is :func:`repro.core.mlp.population_correct_counts_mc`, which
+    computes the layer-1 ``x & masks`` gather once per chromosome and
+    statically unrolls the K instance forwards over it (only exponent
+    genes perturb). Per-tile intermediates therefore stay the SAME size
+    as the nominal path's — NOT a ``jax.vmap`` over instances, which
+    batches the whole tile loop and blows its cache-sized intermediates
+    up by K (measured slower than K sequential dispatches on CPU) — and
+    the shared gather is what makes one batched dispatch beat K
+    sequential ones (``benchmarks.kernel_bench.bench_mc_fitness`` gates
+    the ratio). Column k is bit-identical to evaluating
+    ``apply_device_deltas(pop, dev[k], gene_high)`` alone; row 0 of
+    ``dev`` is all-zero, so column 0 IS the nominal count.
+    """
+    P, G = pop.shape
+    K = dev.shape[0]
+    S, n_in = x_int.shape
+    st = min(sample_tile, S)
+    pt = min(pop_tile, P)
+
+    pad_s = (st - S % st) % st
+    if pad_s:
+        x_int = jnp.pad(x_int, ((0, pad_s), (0, 0)))
+        labels = jnp.pad(labels, (0, pad_s), constant_values=-1)
+    x_c = x_int.reshape(-1, st, n_in)
+    y_c = labels.reshape(-1, st)
+    s_starts = jnp.arange(x_c.shape[0], dtype=jnp.int32) * st
+
+    pad_p = (pt - P % pt) % pt
+    if pad_p:
+        pop = jnp.pad(pop, ((0, pad_p), (0, 0)))
+    tiles = pop.reshape(-1, pt, G)
+
+    def eval_tile(rows):
+        def tile_counts(xy):
+            xb, yb = xy
+            return population_correct_counts_mc(spec, rows, dev, gene_high,
+                                                xb, yb, out_mask=out_mask)
+
+        def body(acc, xys):
+            xb, yb, start_s = xys
+            if n_valid_samples is None:
+                c = tile_counts((xb, yb))
+            else:
+                c = lax.cond(start_s < n_valid_samples, tile_counts,
+                             lambda xy: jnp.zeros((pt, K), jnp.int32),
+                             (xb, yb))
+            return acc + c, None
+
+        acc, _ = lax.scan(body, jnp.zeros((pt, K), jnp.int32),
+                          (x_c, y_c, s_starts))
+        return acc
+
+    if n_valid_rows is None:
+        counts = lax.map(eval_tile, tiles)
+    else:
+        starts = jnp.arange(tiles.shape[0], dtype=jnp.int32) * pt
+
+        def step(_, inp):
+            rows, start = inp
+            c = lax.cond(start < n_valid_rows, eval_tile,
+                         lambda r: jnp.zeros((pt, K), jnp.int32), rows)
+            return 0, c
+
+        _, counts = lax.scan(step, 0, (tiles, starts))
+    return counts.reshape(-1, K)[:P]

@@ -126,7 +126,7 @@ def hybrid_decode(cfg: ArchConfig, params, token, caches, pos, *, tp=16,
     app = 0
     for (i0, i1, do_shared) in _segments(cfg):
         seg_params = _slice_layers(params, i0, i1)
-        seg_cache = jax.tree.map(lambda a: a[i0:i1], ssm_all)
+        seg_cache = jax.tree.map(lambda a, lo=i0, hi=i1: a[lo:hi], ssm_all)
 
         def body(carry, xs):
             hh = carry

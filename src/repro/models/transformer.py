@@ -214,7 +214,7 @@ def _scan_or_unroll(body, init, xs, n: int, use_scan: bool):
     carry = init
     ys = []
     for g in range(n):
-        carry, y = body(carry, jax.tree.map(lambda a: a[g], xs))
+        carry, y = body(carry, jax.tree.map(lambda a, i=g: a[i], xs))
         ys.append(y)
     if all(y is None for y in ys):
         return carry, None

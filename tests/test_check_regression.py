@@ -7,14 +7,16 @@ import os
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import (ABSOLUTE_FLOORS, GATED_SPEEDUPS,
-                                         check)
+from benchmarks.check_regression import (ABSOLUTE_CEILINGS, ABSOLUTE_FLOORS,
+                                         GATED_SPEEDUPS, check)
 
 
 def _full(value, cpu_count=1):
     d = {k: value for k in GATED_SPEEDUPS}
     for k, floor in ABSOLUTE_FLOORS.items():
         d[k] = max(value, floor)
+    for k, ceiling in ABSOLUTE_CEILINGS.items():
+        d[k] = ceiling / 2
     d["cpu_count"] = cpu_count
     return d
 
@@ -62,3 +64,22 @@ def test_missing_fresh_key_fails():
     del fresh["ranking_speedup_vs_matrix"]
     failures, _ = check(_full(3.0), fresh, 0.20)
     assert any("missing" in f for f in failures)
+
+
+def test_mc_overhead_ceiling_is_gated():
+    assert ABSOLUTE_CEILINGS["mc_k8_overhead_vs_k1"] == 1.0
+
+
+def test_absolute_ceiling_unconditional():
+    fresh = _full(3.0, cpu_count=1)
+    fresh["mc_k8_overhead_vs_k1"] = 1.3    # above the 1.0 ceiling
+    failures, _ = check(_full(3.0, cpu_count=4), fresh, 0.20)
+    assert any("mc_k8_overhead_vs_k1" in f for f in failures), \
+        "absolute ceilings must fail even when core counts differ"
+
+
+def test_missing_ceiling_key_fails():
+    fresh = _full(3.0)
+    del fresh["mc_k8_overhead_vs_k1"]
+    failures, _ = check(_full(3.0), fresh, 0.20)
+    assert any("mc_k8_overhead_vs_k1" in f for f in failures)

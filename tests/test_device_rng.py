@@ -1,0 +1,65 @@
+"""Property tests for the SLOT_DEVICE gene RNG (hypothesis).
+
+The device-variation Monte-Carlo fitness draws its perturbations with
+``gene_uniform(key, ids, K, slot=SLOT_DEVICE)`` (``engine.device_deltas``).
+The contract mirrors the variation slots' (tests/test_variation.py): a
+draw depends only on (key, slot, gene id, instance row) — never on the
+gene-axis length or on how many instances are drawn — and the SLOT_DEVICE
+stream is disjoint from every variation slot's. That is what keeps padded
+suite lanes bit-identical to their unpadded originals (the embedded
+genes' draws survive re-indexing) and lets K grow without reshuffling the
+instances already drawn. Deterministic MC-fitness tests live in
+tests/test_device_variation.py (no hypothesis needed there).
+"""
+import numpy as np
+import pytest
+import jax
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import (SLOT_CROSS_SWAP, SLOT_MUT_DO, SLOT_MUT_VAL,
+                               SLOT_DEVICE, MLPTopology, GenomeSpec,
+                               gene_uniform)
+
+SPEC = GenomeSpec(MLPTopology((10, 3, 2)))
+KEY = jax.random.PRNGKey(0)
+IDS = np.asarray(SPEC.table().ids)
+
+
+@given(st.integers(1, 40), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_device_draws_independent_of_gene_axis_length(n_keep, seed):
+    """Dropping genes from the axis never changes the survivors' device
+    draws: draw (k, j) is a function of ids[j], not of j or the length."""
+    rng = np.random.default_rng(seed)
+    keep = np.sort(rng.choice(IDS.shape[0], size=min(n_keep, IDS.shape[0]),
+                              replace=False))
+    full = np.asarray(gene_uniform(KEY, IDS, 4, slot=SLOT_DEVICE))
+    sub = np.asarray(gene_uniform(KEY, IDS[keep], 4, slot=SLOT_DEVICE))
+    np.testing.assert_array_equal(full[:, keep], sub)
+
+
+@given(st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_device_draws_independent_of_instance_count(k1, k2):
+    """Instance k's draws don't depend on how many instances are drawn:
+    the counter is (slot, gene id, row), so prefixes always agree — K can
+    grow without reshuffling existing device instances."""
+    a = np.asarray(gene_uniform(KEY, IDS, k1, slot=SLOT_DEVICE))
+    b = np.asarray(gene_uniform(KEY, IDS, k2, slot=SLOT_DEVICE))
+    k = min(k1, k2)
+    np.testing.assert_array_equal(a[:k], b[:k])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_device_slot_disjoint_from_variation_slots(seed, k):
+    """Even under the SAME key the SLOT_DEVICE stream never collides with
+    a variation slot's (belt-and-braces: device_deltas also uses its own
+    key, derived from GAConfig.device_seed rather than the run key)."""
+    key = jax.random.PRNGKey(seed)
+    dev = np.asarray(gene_uniform(key, IDS, k, slot=SLOT_DEVICE))
+    for slot in (SLOT_CROSS_SWAP, SLOT_MUT_DO, SLOT_MUT_VAL):
+        other = np.asarray(gene_uniform(key, IDS, k, slot=slot))
+        assert not np.array_equal(dev, other)
+    assert SLOT_DEVICE not in (SLOT_CROSS_SWAP, SLOT_MUT_DO, SLOT_MUT_VAL)

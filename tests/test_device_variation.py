@@ -1,0 +1,255 @@
+"""Device-variation Monte-Carlo fitness + the unified backend API.
+
+Deterministic tests (no hypothesis): the delta construction contract,
+backend equivalence of the MC fitness (ref / interpret / the per-instance
+hdl oracle), bit-identity of variation-on runs across the trainer and the
+batched runners, the off-mode no-op guarantee, and the
+``BackendPolicy``/``GAConfig`` construction-time validation (including
+the deprecated ``*_backend`` alias path and the ``dedup`` ValueError
+regression). SLOT_DEVICE *property* tests (length/row-count independence,
+slot disjointness) live in tests/test_device_rng.py under hypothesis.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.engine import GAConfig, Problem, run_batch
+from repro.core.genome import (GenomeSpec, MLPTopology, apply_device_deltas,
+                               random_population)
+from repro.core.quantize import quantize_inputs
+from repro.core.trainer import GATrainer
+from repro.core import hdl
+from repro.kernels import BackendPolicy, resolve_backends
+from repro.kernels.pop_mlp import population_correct
+
+TOPO = MLPTopology((6, 4, 2))
+RNG = np.random.default_rng(42)
+X = RNG.random((96, 6)).astype(np.float32)
+Y = (X.sum(axis=1) > 3.0).astype(np.int32)
+
+
+def _problem(**kw):
+    kw.setdefault("pop_size", 16)
+    kw.setdefault("generations", 3)
+    return Problem.from_data(TOPO, X, Y, GAConfig(**kw), baseline_acc=0.9)
+
+
+def _state_digest(state):
+    return tuple(np.asarray(jax.device_get(leaf)).tobytes()
+                 for leaf in (state.pop, state.obj, state.viol, state.counts))
+
+
+# -- delta construction ------------------------------------------------------
+
+def test_device_deltas_contract():
+    p = _problem(variation_mode="mean", n_device_samples=6,
+                 variation_scale=0.5)
+    dev = np.asarray(engine.device_deltas(p))
+    assert dev.shape == (6, p.genes.ids.shape[0])
+    assert dev.dtype == np.int32
+    # row 0 is the nominal instance
+    assert (dev[0] == 0).all()
+    assert set(np.unique(dev)) <= {-1, 0, 1}
+    # only live exponent genes perturb
+    live = np.asarray(p.spec.is_exp & p.genes.valid)
+    assert (dev[:, ~live] == 0).all()
+    # scale 0.5 flips roughly half the live genes over the K-1 live rows
+    frac = (dev[1:, live] != 0).mean()
+    assert 0.3 < frac < 0.7
+
+
+def test_device_deltas_keyed_by_device_seed_not_run_seed():
+    a = engine.device_deltas(_problem(variation_mode="mean", seed=0))
+    b = engine.device_deltas(_problem(variation_mode="mean", seed=123))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = engine.device_deltas(_problem(variation_mode="mean", device_seed=9))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_apply_device_deltas_clips_per_gene():
+    high = jnp.asarray([4, 8, 2], jnp.int32)
+    pop = jnp.asarray([[3, 7, 0], [0, 0, 1]], jnp.int32)
+    deltas = jnp.asarray([[1, 1, -1], [-1, -1, 1]], jnp.int32)
+    out = np.asarray(apply_device_deltas(pop, deltas, high))
+    np.testing.assert_array_equal(out, [[3, 7, 0], [0, 0, 1]])
+    # zero delta passes through even out-of-range genes untouched
+    pop2 = jnp.asarray([[9, 9, 9]], jnp.int32)
+    out2 = np.asarray(apply_device_deltas(pop2, jnp.zeros((1, 3), jnp.int32),
+                                          high))
+    np.testing.assert_array_equal(out2, [[9, 9, 9]])
+
+
+# -- MC fitness backend equivalence -----------------------------------------
+
+def test_mc_fitness_ref_interpret_oracle_agree():
+    spec = GenomeSpec(TOPO)
+    t = spec.table()
+    pop = random_population(jax.random.PRNGKey(3), t, 8)
+    p = _problem(pop_size=8, variation_mode="mean", n_device_samples=4,
+                 variation_scale=0.5)
+    dev = engine.device_deltas(p)
+    x_int = quantize_inputs(jnp.asarray(X), TOPO.input_bits)
+    labels = jnp.asarray(Y, jnp.int32)
+    ref = population_correct(pop, x_int, labels, spec=spec, backend="ref",
+                             dev=dev, gene_high=t.high)
+    krn = population_correct(pop, x_int, labels, spec=spec,
+                             backend="interpret", dev=dev, gene_high=t.high)
+    assert ref.shape == (8, 4)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(krn))
+    # column 0 is the unperturbed population (nominal instance)
+    nom = population_correct(pop, x_int, labels, spec=spec, backend="ref")
+    np.testing.assert_array_equal(np.asarray(ref)[:, 0], np.asarray(nom))
+    # each column equals the pure-python per-instance hardware oracle
+    g = np.asarray(pop[2])
+    logits = hdl.evaluate_genome_instances(spec, g, np.asarray(x_int),
+                                           np.asarray(dev))
+    oracle = (logits.argmax(axis=-1) == Y[None, :]).sum(axis=-1)
+    np.testing.assert_array_equal(oracle, np.asarray(ref)[2])
+
+
+def test_mc_fitness_requires_gene_high_and_rejects_jnp():
+    spec = GenomeSpec(TOPO)
+    t = spec.table()
+    pop = random_population(jax.random.PRNGKey(3), t, 4)
+    x_int = quantize_inputs(jnp.asarray(X), TOPO.input_bits)
+    labels = jnp.asarray(Y, jnp.int32)
+    dev = jnp.zeros((2, pop.shape[1]), jnp.int32)
+    with pytest.raises(ValueError, match="gene_high"):
+        population_correct(pop, x_int, labels, spec=spec, backend="ref",
+                           dev=dev)
+    with pytest.raises(ValueError, match="jnp"):
+        population_correct(pop, x_int, labels, spec=spec, backend="jnp",
+                           dev=dev, gene_high=t.high)
+
+
+# -- whole-run equivalence ---------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["mean", "worst"])
+def test_variation_run_trainer_matches_run_batch(mode):
+    cfg = GAConfig(pop_size=16, generations=3, variation_mode=mode,
+                   n_device_samples=4, variation_scale=0.4)
+    tr = GATrainer(TOPO, X, Y, cfg, baseline_acc=0.9)
+    st, _ = tr.run()
+    assert st.obj.shape == (16, 3)
+    assert st.counts.shape == (16, 4)
+    states, _, _ = run_batch(tr.problem, [cfg.seed])
+    peeled = engine.state_at(states, 0)
+    assert _state_digest(st) == _state_digest(peeled)
+    # objectives are internally consistent: nominal col from counts[:, 0],
+    # robust col the mode-reduction over instances
+    acc = np.asarray(st.counts, np.float64) / X.shape[0]
+    red = acc.mean(axis=1) if mode == "mean" else acc.min(axis=1)
+    np.testing.assert_allclose(np.asarray(st.obj)[:, 0], 1 - acc[:, 0],
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st.obj)[:, 2], 1 - red,
+                               rtol=0, atol=1e-6)
+
+
+def test_variation_dedup_on_off_identical():
+    base = dict(pop_size=16, generations=3, variation_mode="worst",
+                n_device_samples=3, variation_scale=0.3)
+    st_on, _ = GATrainer(TOPO, X, Y, GAConfig(dedup=True, **base),
+                         baseline_acc=0.9).run()
+    st_off, _ = GATrainer(TOPO, X, Y, GAConfig(dedup=False, **base),
+                          baseline_acc=0.9).run()
+    for a, b in zip((st_on.pop, st_on.obj, st_on.viol),
+                    (st_off.pop, st_off.obj, st_off.viol)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_variation_off_is_two_objective():
+    st, _ = GATrainer(TOPO, X, Y, GAConfig(pop_size=16, generations=2),
+                      baseline_acc=0.9).run()
+    assert st.obj.shape == (16, 2)
+    assert st.counts.shape == (16,)
+
+
+# -- BackendPolicy + GAConfig validation ------------------------------------
+
+def test_backend_policy_validates_names():
+    BackendPolicy(fitness="kernel", ranking="matrix")  # valid combos
+    with pytest.raises(ValueError, match="unknown fitness backend"):
+        BackendPolicy(fitness="cuda")
+    with pytest.raises(ValueError, match="unknown ranking backend"):
+        BackendPolicy(ranking="sweeep")
+    with pytest.raises(ValueError, match="unknown backend paths"):
+        resolve_backends(fitnes="ref")
+
+
+def test_gaconfig_backends_resolve_and_mirror():
+    cfg = GAConfig(backends=BackendPolicy(fitness="ref", ranking="matrix"))
+    assert cfg.backends.fitness == "ref"
+    # the legacy mirror fields stay readable
+    assert cfg.fitness_backend == "ref"
+    assert cfg.ranking_backend == "matrix"
+    with pytest.raises(ValueError, match="unknown generation backend"):
+        GAConfig(backends=BackendPolicy(generation="nope"))
+    with pytest.raises(ValueError, match="unknown fitness backend"):
+        GAConfig(fitness_backend="nope")
+
+
+def test_legacy_backend_kwargs_warn_once_and_win():
+    engine._legacy_backend_warned = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = GAConfig(fitness_backend="ref")
+        GAConfig(ranking_backend="matrix")
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1 and "fitness_backend" in str(deps[0].message)
+    assert cfg.backends.fitness == "ref"
+    # a legacy kwarg overrides the policy (replace_cfg-style updates work)
+    engine._legacy_backend_warned = True
+    cfg2 = GAConfig(backends=BackendPolicy(fitness="jnp"),
+                    fitness_backend="ref")
+    assert cfg2.backends.fitness == "ref"
+
+
+def test_gaconfig_variation_validation():
+    with pytest.raises(ValueError, match="variation_mode"):
+        GAConfig(variation_mode="avg")
+    with pytest.raises(ValueError, match="n_device_samples"):
+        GAConfig(variation_mode="mean", n_device_samples=0)
+    with pytest.raises(ValueError, match="variation_scale"):
+        GAConfig(variation_mode="mean", variation_scale=1.5)
+    with pytest.raises(ValueError, match="jnp"):
+        GAConfig(variation_mode="mean",
+                 backends=BackendPolicy(fitness="jnp"))
+
+
+def test_dedup_mode_rejects_unknown_value():
+    # regression: an unknown dedup value used to fall through silently
+    cfg = dataclasses.replace(GAConfig(), dedup="legcy")
+    with pytest.raises(ValueError, match="dedup"):
+        engine.dedup_mode(cfg)
+
+
+def test_problem_variation_scale_is_sweepable_leaf():
+    p = _problem(variation_mode="mean", variation_scale=0.25)
+    assert float(p.variation_scale) == pytest.approx(0.25)
+    p2 = p.with_hypers(variation_scale=jnp.float32(0.5))
+    assert float(p2.variation_scale) == pytest.approx(0.5)
+    leaves = jax.tree_util.tree_leaves(p2)
+    assert any(np.asarray(leaf).shape == () and
+               float(np.asarray(leaf)) == pytest.approx(0.5)
+               for leaf in leaves)
+
+
+# -- the api facade ----------------------------------------------------------
+
+def test_api_facade_surface():
+    import repro.api as api
+    missing = [n for n in api.__all__ if not hasattr(api, n)]
+    assert not missing
+    tr, state, _ = api.train(TOPO, X, Y,
+                             api.GAConfig(pop_size=16, generations=2),
+                             baseline_acc=0.9)
+    ref, _ = GATrainer(TOPO, X, Y, GAConfig(pop_size=16, generations=2),
+                       baseline_acc=0.9).run()
+    assert _state_digest(state) == _state_digest(ref)
+    front = api.front_of(state)
+    assert front["objectives"].shape[1] == 2
