@@ -47,6 +47,7 @@ GATED_SPEEDUPS = (
     "swept_configs_speedup_vs_sequential",
     "suite_speedup_vs_sequential",
     "ranking_speedup_vs_matrix",
+    "serve_throughput_speedup_vs_static",
 )
 
 # Absolute floors on top of the relative gate: these targets must hold no
@@ -58,6 +59,12 @@ GATED_SPEEDUPS = (
 ABSOLUTE_FLOORS = {
     "trainer_dedup_on_speedup_vs_seed": 6.0,
     "ranking_speedup_vs_matrix": 2.0,
+    # continuous-batching serve acceptance bar: a 12-job stream with a 4x
+    # generation-budget spread must beat the static max-shape run_suite
+    # dispatch by >= 1.5x (steady-state warm passes, same process) — the
+    # budget gate + lane retirement/backfill are the entire win, so a
+    # ratio below this means dead lanes are burning work again.
+    "serve_throughput_speedup_vs_static": 1.5,
 }
 
 # Ceilings gate lower-is-better ratios the same unconditional way the
@@ -73,13 +80,19 @@ ABSOLUTE_CEILINGS = {
 
 def check(baseline: dict, fresh: dict, max_regression: float):
     """Returns (failures, report_lines) for the gated speedup keys."""
-    failures, lines = [], []
+    failures, lines, skipped = [], [], []
     base_cores, fresh_cores = baseline.get("cpu_count"), fresh.get("cpu_count")
     cores_match = base_cores is not None and base_cores == fresh_cores
     if not cores_match:
         lines.append(f"NOTE relative gates skipped: baseline cpu_count="
                      f"{base_cores} vs fresh cpu_count={fresh_cores} "
                      "(absolute floors still apply)")
+    base_plat = baseline.get("platform"), baseline.get("jax_version")
+    fresh_plat = fresh.get("platform"), fresh.get("jax_version")
+    if base_plat != fresh_plat:
+        lines.append(f"NOTE baseline platform/jax {base_plat} != fresh "
+                     f"{fresh_plat} — timings are cross-build; consider "
+                     "refreshing the committed baseline")
     for key in GATED_SPEEDUPS:
         if key not in fresh:
             failures.append(f"{key}: missing from fresh results")
@@ -100,6 +113,7 @@ def check(baseline: dict, fresh: dict, max_regression: float):
         if not cores_match:
             lines.append(f"SKIP {key}: {new:.2f}x vs baseline {old:.2f}x "
                          "(different core count — not comparable)")
+            skipped.append(key)
             continue
         status = "PASS" if new >= floor else "FAIL"
         lines.append(f"{status} {key}: {new:.2f}x vs baseline {old:.2f}x "
@@ -119,6 +133,11 @@ def check(baseline: dict, fresh: dict, max_regression: float):
         else:
             lines.append(f"PASS {key}: {new:.2f}x < absolute ceiling "
                          f"{ceiling:.2f}x")
+    if skipped:
+        # the roll-up a reviewer actually reads: which gates this run did
+        # NOT enforce, so a silent green can't hide an unchecked ratio
+        lines.append(f"NOTE {len(skipped)} relative gate(s) NOT enforced "
+                     f"this run (cpu_count mismatch): {', '.join(skipped)}")
     return failures, lines
 
 

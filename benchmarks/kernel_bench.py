@@ -80,6 +80,15 @@ have a perf trajectory:
                                ``sweep.run_suite`` dispatch; per-cell
                                fronts are asserted bit-identical to the
                                unpadded sequential runs.
+  * ``serve_stream``         — a heterogeneous 12-job stream (2 datasets,
+                               budgets 64..16) through the continuous-
+                               batching ``SearchServer`` vs ONE static
+                               max-shape ``run_suite`` dispatch padded to
+                               the longest budget vs sequential trainers;
+                               per-job fronts asserted bit-identical to
+                               the sequential runs; summary ratio
+                               ``serve_throughput_speedup_vs_static``
+                               (steady-state warm passes both sides).
 
 Every workload is seeded from ``common.BENCH_SEED`` (the ``--seed`` flag of
 ``benchmarks.run``), so two runs at the same seed score identical chromosome
@@ -89,6 +98,7 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import time
 
 import numpy as np
@@ -622,6 +632,120 @@ def bench_fitness_suite(results, n_seeds: int = 2, pop: int = 64,
              f"|suite_s={suite_s:.1f}|speedup_vs_sequential={speedup:.2f}x")
 
 
+def bench_serve(results, pop: int = 32, n_lanes: int = 4,
+                segment_len: int = 16):
+    """Continuous-batching serve throughput on a heterogeneous job stream.
+
+    The workload is 12 jobs over two datasets (cardio 1488 samples /
+    redwine 1120) with generation budgets 64..16 — the "search service"
+    reality where requests differ in how long they run. Three ways to
+    serve it:
+
+      * sequential — one ``GATrainer`` per job, its own compile each
+        (the pre-batching reality; also the bit-identity oracle: every
+        serve front is asserted equal to its trainer's).
+      * static     — ONE ``run_suite`` dispatch padded to the *longest*
+        budget: every lane runs 64 generations because the program shape
+        is fixed at trace time, so short jobs burn 4x their budget.
+      * serve      — ``SearchServer`` (4 lanes, 16-gen segments, LJF
+        admission): lanes retire at their budget via the per-lane gate
+        and freed slots backfill from the queue, so the total work is
+        the *sum of budgets*, not n_jobs x max_budget.
+
+    The gated ratio ``serve_throughput_speedup_vs_static`` compares
+    steady-state (warm, compile-cache hit) passes on both sides — the
+    honest metric for an always-on service; cold times are recorded as
+    info. Sequential stays cold (each job IS a fresh compile there)."""
+    from repro.serve import SearchServer
+
+    budgets = [64, 64, 32, 32, 24, 24, 16, 16, 16, 16, 16, 16]
+    names = ["cardio", "redwine"]
+    max_gens = max(budgets)
+    n_seeds = len(budgets) // len(names)
+    seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
+
+    def cfg(seed, gens):
+        return GAConfig(pop_size=pop, generations=gens, seed=seed,
+                        backends=BackendPolicy(fitness="ref"), scan=True)
+
+    datasets = [load_dataset(n) for n in names]
+    problems = [engine.Problem.from_data(
+        MLPTopology(ds.topology), ds.x_train, ds.y_train,
+        cfg(seeds[0], max_gens)) for ds in datasets]
+    # job i: dataset i%2, seed BENCH_SEED + i//2 — budgets interleaved so
+    # both datasets see the full 64..16 budget spread
+    jobs = [(i % len(names), seeds[i // len(names)], budgets[i])
+            for i in range(len(budgets))]
+
+    srv = SearchServer.for_problems(problems, n_lanes=n_lanes,
+                                    segment_len=segment_len,
+                                    policy="longest")
+
+    def serve_pass():
+        ids = [srv.submit(problems[d], generations=g, seed=s)
+               for d, s, g in jobs]
+        return ids, {r.job_id: r for r in srv.drain()}
+
+    t0 = time.time()
+    ids, served = serve_pass()       # cold: compiles segment + init progs
+    serve_cold_s = time.time() - t0
+    serve_s = min(_timed(serve_pass) for _ in range(2))
+
+    # sequential oracle: per-job trainers, fronts must match bit-for-bit
+    t0 = time.time()
+    for jid, (d, s, g) in zip(ids, jobs):
+        ds = datasets[d]
+        tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                       cfg(s, g))
+        state, _ = tr.run()
+        front = tr.front(state)
+        r = served[jid]
+        assert np.array_equal(r.front["objectives"], front["objectives"]), \
+            f"serve front diverged from sequential trainer (job {jid})"
+        assert np.array_equal(r.front["genomes"], front["genomes"]), \
+            f"serve genomes diverged from sequential trainer (job {jid})"
+        assert r.unique_evals == tr.unique_evals, f"eval accounting {jid}"
+    seq_s = time.time() - t0
+
+    # static baseline: one max-shape run_suite dispatch, every cell padded
+    # to the longest budget (single sample bucket = truly one program)
+    def static_pass():
+        result = sweep.run_suite(problems, seeds, names=names,
+                                 generations=max_gens,
+                                 sample_bucket_factor=None)
+        jax.block_until_ready(result.states.pop)
+
+    t0 = time.time()
+    static_pass()                    # cold compile
+    static_cold_s = time.time() - t0
+    static_s = min(_timed(static_pass) for _ in range(2))
+
+    speedup = static_s / serve_s
+    lane_gens = sum(budgets)
+    results["serve_stream"] = {
+        "serve_s": serve_s, "static_s": static_s, "sequential_s": seq_s,
+        "serve_cold_s": serve_cold_s, "static_cold_s": static_cold_s,
+        "n_jobs": len(jobs), "budgets": budgets, "n_lanes": n_lanes,
+        "segment_len": segment_len, "pop": pop, "policy": "longest",
+        "datasets": names, "lane_generations": lane_gens,
+        "static_lane_generations": len(jobs) * max_gens,
+        "fronts_bit_identical": True, "backend": "ref+scan+vmap-serve"}
+    results["serve_throughput_speedup_vs_static"] = speedup
+    emit_row("kernel/serve_stream", serve_s / len(jobs) * 1e6,
+             f"jobs={len(jobs)}|lanes={n_lanes}|segment={segment_len}"
+             f"|pop={pop}|lane_gens={lane_gens}"
+             f"|static_lane_gens={len(jobs) * max_gens}"
+             f"|serve_s={serve_s:.2f}|static_s={static_s:.2f}"
+             f"|seq_s={seq_s:.1f}|speedup_vs_static={speedup:.2f}x"
+             f"|speedup_vs_sequential={seq_s / serve_s:.2f}x")
+
+
+def _timed(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0
+
+
 def bench_pow2_packing():
     w = jax.random.normal(jax.random.PRNGKey(common.BENCH_SEED + 1),
                           (4096, 4096))
@@ -646,6 +770,7 @@ def run():
     bench_fitness_batched(results)
     bench_fitness_swept(results)
     bench_fitness_suite(results)
+    bench_serve(results)
     base = results["fitness_eval"]["chromo_evals_per_s"]
     speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
     results["dispatch_speedup_vs_seed"] = speedup
@@ -654,8 +779,11 @@ def run():
     # recorded so check_regression can skip relative gates when a PR's
     # runner has a different core count than the committed baseline's
     # (vmapped/batched rows skew hard with vCPUs; absolute floors and
-    # bit-identity assertions are unconditional)
+    # bit-identity assertions are unconditional) — and so a stale
+    # baseline from a different platform/jax build is visible in review
     results["cpu_count"] = os.cpu_count()
+    results["platform"] = platform.platform()
+    results["jax_version"] = jax.__version__
     with open(_RESULTS_PATH, "w") as f:
         json.dump(results, f, indent=1, default=float)
     print(f"# fitness dispatch speedup vs seed oracle: {speedup:.2f}x, "
@@ -673,6 +801,8 @@ def run():
           f"{results['swept_configs_speedup_vs_sequential']:.2f}x, "
           f"5-dataset suite vs sequential: "
           f"{results['suite_speedup_vs_sequential']:.2f}x, "
+          f"serve stream vs static max-shape dispatch: "
+          f"{results['serve_throughput_speedup_vs_static']:.2f}x, "
           f"MC-fitness K=8 batched vs sequential: "
           f"{results['mc_k8_overhead_vs_k1']:.2f}x "
           f"(→ {_RESULTS_PATH})")

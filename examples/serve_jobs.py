@@ -1,0 +1,91 @@
+"""An always-on GA search service over a heterogeneous job stream.
+
+    PYTHONPATH=src python examples/serve_jobs.py
+
+The batching ladder (seeds → configs → datasets) makes *homogeneous*
+grids one dispatch, but real search traffic is a stream: jobs with
+different datasets, seeds and generation budgets arriving at different
+times. A static padded dispatch would run every lane for the longest
+budget and hold the queue until the whole batch returns. `SearchServer`
+instead advances a fixed set of lanes in compiled fixed-size segments
+(one program, reused forever) and, between segments, retires lanes whose
+generation budget is exhausted — returning that job's Pareto front
+immediately — and admits queued jobs into the freed slots by padding
+them into the shared max-shape layout at runtime.
+
+Every retired job is bit-identical to its standalone sequential
+`GATrainer.run` — the demo checks one job against its trainer to prove
+it. See `repro/serve/__init__.py` for the architecture notes and
+`benchmarks/kernel_bench.bench_serve` for the throughput numbers.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.api import GAConfig, GATrainer, MLPTopology, Problem
+from repro.data import load_dataset
+from repro.serve import SearchServer
+
+POP, SEGMENT = 32, 8
+
+
+def main():
+    cfg = GAConfig(pop_size=POP, generations=64)
+    datasets = {n: load_dataset(n) for n in ("cardio", "redwine",
+                                             "breast_cancer")}
+    problems = {n: Problem.from_data(MLPTopology(ds.topology), ds.x_train,
+                                     ds.y_train, cfg)
+                for n, ds in datasets.items()}
+
+    # 4 lanes, 8-generation segments, longest-job-first admission
+    srv = SearchServer.for_problems(list(problems.values()), n_lanes=4,
+                                    segment_len=SEGMENT, policy="longest")
+
+    # a heterogeneous stream: budgets spanning 4x, three topologies
+    stream = [("cardio", 32, 0), ("redwine", 16, 0), ("breast_cancer", 8, 0),
+              ("cardio", 16, 1), ("redwine", 32, 1), ("breast_cancer", 24, 1)]
+    for name, gens, seed in stream:
+        srv.submit(problems[name], generations=gens, seed=seed,
+                   name=f"{name}/s{seed}/g{gens}")
+    print(f"submitted {len(stream)} jobs ({len(srv.pending_jobs)} queued) "
+          f"into 4 lanes, segment = {SEGMENT} generations\n")
+
+    done = []
+    while srv.pending_jobs or srv.active_jobs:
+        retired = srv.step()
+        done.extend(retired)
+        names = ", ".join(r.name for r in retired) or "—"
+        print(f"segment {srv.segments_done:2d}: retired [{names}] "
+              f"({len(srv.active_jobs)} running, "
+              f"{len(srv.pending_jobs)} queued)")
+        # staggered submission: traffic keeps arriving mid-flight and
+        # backfills lanes freed by retired jobs — no recompilation
+        if srv.segments_done == 2:
+            jid = srv.submit(problems["cardio"], generations=8, seed=7,
+                             name="cardio/s7/g8 (late)")
+            print(f"            ... job {jid} submitted mid-flight")
+
+    print("\nper-job Pareto fronts (min error vs min area):")
+    for r in sorted(done, key=lambda r: r.name):
+        objs = np.asarray(r.front["objectives"])
+        best = objs[objs[:, 0].argmin()]
+        print(f"  {r.name:>22}: {len(objs):2d} points, best acc-loss "
+              f"{best[0]:.3f} @ {best[1]:.0f} FAs  "
+              f"(admitted seg {r.admitted_segment}, retired seg "
+              f"{r.retired_segment}, {r.unique_evals} unique evals)")
+
+    # the service contract: any job == its standalone sequential trainer
+    name, gens, seed = stream[0]
+    ds = datasets[name]
+    tr = GATrainer(MLPTopology(ds.topology), ds.x_train, ds.y_train,
+                   dataclasses.replace(cfg, seed=seed, generations=gens))
+    state, _ = tr.run()
+    served = next(r for r in done if r.name == f"{name}/s{seed}/g{gens}")
+    assert np.array_equal(served.front["objectives"],
+                          tr.front(state)["objectives"])
+    print(f"\n{name}/s{seed}/g{gens} front bit-identical to its standalone "
+          f"GATrainer.run — the serve path changes scheduling, not numerics")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,16 @@ construction (the legacy per-path ``*_backend`` kwargs still work but
 warn). Device-variation Monte-Carlo fitness is the
 ``GAConfig(variation_mode=..., n_device_samples=..., variation_scale=...)``
 trio; see ``engine.device_deltas`` and ROADMAP.md.
+
+Heterogeneous job *streams* — different datasets, seeds and generation
+budgets arriving over time — go through the continuous-batching search
+service: build a ``SearchServer`` (``SearchServer.for_problems`` sizes its
+shared padded layout), ``submit`` ``SearchJob``\\ s and ``step``/``drain``
+for per-job ``JobResult`` Pareto fronts, each bit-identical to the
+standalone sequential ``GATrainer.run`` of that job. The server advances
+all lanes in fixed-size compiled segments and admits/retires jobs at
+segment boundaries (see ``repro.serve`` and ``examples/serve_jobs.py``);
+``SearchServer.save``/``restore`` checkpoint in-flight jobs resumably.
 """
 from __future__ import annotations
 
@@ -50,6 +60,8 @@ from .core.hdl import (emit_verilog, evaluate_genome_python,   # noqa: F401
 from .core.hw_approx_search import LMApproxSearch, FORMATS     # noqa: F401
 from .kernels import (BackendPolicy, resolve_backends,         # noqa: F401
                       BACKEND_CHOICES)
+from .serve import (SearchServer, SearchJob, JobResult,        # noqa: F401
+                    LaneScheduler)
 
 __all__ = [
     # genome / problem setup
@@ -72,6 +84,8 @@ __all__ = [
     "emit_verilog", "evaluate_genome_python", "evaluate_genome_instances",
     # LM-scale post-training approximation search
     "LMApproxSearch", "FORMATS",
+    # continuous-batching search service
+    "SearchServer", "SearchJob", "JobResult", "LaneScheduler",
 ]
 
 

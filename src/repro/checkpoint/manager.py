@@ -100,6 +100,31 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_leaf(directory: str, step: int, name: str, *,
+              verify: bool = True) -> np.ndarray:
+    """Read ONE named leaf of a checkpoint without a target template.
+
+    ``name`` is the manifest leaf key (``_leaf_name`` of its tree path —
+    e.g. ``"2"`` for the third element of a top-level tuple). This is the
+    bootstrap read of two-phase restores: ``repro.serve.SearchServer``
+    stores its host-side scheduler metadata as a uint8 JSON blob leaf
+    *inside* the checkpointed pytree (so the atomic-commit rename covers
+    it), reads it back with this, and only then knows the lane/segment
+    geometry needed to build the restore target for the full pytree.
+    """
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest["leaves"][name]
+    arr = np.load(os.path.join(d, name + ".npy"))
+    if verify:
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in leaf {name!r}: "
+                          f"crc {crc} != {meta['crc32']}")
+    return arr
+
+
 def restore_checkpoint(directory: str, step: int, target, *,
                        shardings=None, verify: bool = True):
     """Restore into the structure of ``target`` (pytree of arrays or

@@ -174,7 +174,7 @@ def _broadcast(cond, leaf):
 
 def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
                gene_mask=None, cache: EvalCache | None = None, gen=None,
-               ids=None):
+               ids=None, active=None):
     """Evaluate ``rows`` with duplicate suppression; returns per-row values.
 
     eval_fn(batch, n_valid) → pytree of arrays with leading axis len(batch);
@@ -210,6 +210,12 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
     ids: per-gene hash-coefficient indices (see :func:`hash_rows`) — pass
         the GeneTable draw ids so padded suite lanes probe, insert and
         evict exactly like their unpadded sequential runs.
+    active: optional () bool — False marks a *retired* lane (the serve
+        path's budget gate): no row needs evaluation, so the lane
+        contributes 0 to the shared ``axis_name`` evaluation bound, and
+        in cache mode no insert or re-stamp fires (the table stays
+        bitwise unchanged). Returned values are unspecified garbage for
+        an inactive lane — callers where-select the old state back in.
 
     Returns ``(values, n_eval)`` — or, in cache mode,
     ``(values, n_eval, n_hit, new_cache)``: values is a pytree matching
@@ -239,6 +245,11 @@ def dedup_eval(eval_fn, rows: jnp.ndarray, known=None, axis_name=None,
         needs = first & (grp_known[uid] == 0)
     else:
         needs = first
+
+    if active is not None:
+        # retired lane: nothing needs evaluation, and (below) no cache
+        # hit counts as useful — so neither inserts nor re-stamps fire
+        needs = needs & active
 
     if cache is not None:
         # identical rows share identical probes, so hit/cval are constant

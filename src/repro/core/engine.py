@@ -48,6 +48,12 @@ from .pareto import pareto_front
 from ..kernels.pop_mlp import population_correct
 from ..kernels import BackendPolicy
 
+# "unlimited" sentinel of the per-lane generation-budget leaf: with the
+# budget gate on, a lane whose state.gen can never reach its budget is
+# simply never retired (int32 max — state.gen < NO_BUDGET always holds
+# for any realistic run length).
+NO_BUDGET = np.int32(2**31 - 1)
+
 _LEGACY_BACKEND_FIELDS = (("fitness", "fitness_backend"),
                           ("variation", "variation_backend"),
                           ("generation", "generation_backend"),
@@ -120,6 +126,18 @@ class GAConfig:
     # so every run path / seed / lane of a batch sees the same K devices
     device_seed: int = 0
     variation_scale: float = 0.2     # default P(an exponent gene shifts ±1)
+    # -- per-lane generation budgets (the serve path) -----------------------
+    # ``None`` (default): no budget machinery — ``run_scanned`` runs every
+    # requested generation exactly as before, zero overhead. An integer
+    # turns the budget gate ON (a *static* switch): the traced
+    # ``Problem.generations_budget`` leaf (defaulted from this value,
+    # overridable per lane) then bounds how many generations a lane
+    # actually evolves — once ``state.gen`` reaches its budget the lane
+    # becomes a no-op carry passthrough (key/gen/cache untouched, zero
+    # rows contributed to the shared dedup evaluation bound), which is the
+    # retirement mechanism ``repro.serve`` schedules around. A run with
+    # budget == generations is bit-identical to the ungated path.
+    generations_budget: int | None = None
     backends: BackendPolicy | None = None
 
     def __post_init__(self):
@@ -214,6 +232,11 @@ class Problem:
     n_valid_samples: jnp.ndarray = None      # () int32 true (unpadded) S
     variation_scale: jnp.ndarray = None      # () float32 device-variation
     #                                          strength (sweepable leaf)
+    generations_budget: jnp.ndarray = None   # () int32 per-lane generation
+    #                                          budget (INT32_MAX = unlimited;
+    #                                          only read when the static
+    #                                          cfg.generations_budget gate
+    #                                          is on — see run_scanned)
 
     def __post_init__(self):
         if self.crossover_rate is None:
@@ -232,12 +255,17 @@ class Problem:
             self.n_valid_samples = jnp.int32(self.labels.shape[0])
         if self.variation_scale is None:
             self.variation_scale = jnp.float32(self.cfg.variation_scale)
+        if self.generations_budget is None:
+            self.generations_budget = jnp.int32(
+                NO_BUDGET if self.cfg.generations_budget is None
+                else self.cfg.generations_budget)
 
     def tree_flatten(self):
         return ((self.x_int, self.labels, self.baseline_acc,
                  self.crossover_rate, self.mutation_rate_gene,
                  self.max_acc_loss, self.genes, self.out_mask,
-                 self.inv_n, self.n_valid_samples, self.variation_scale),
+                 self.inv_n, self.n_valid_samples, self.variation_scale,
+                 self.generations_budget),
                 (self.spec, self.cfg))
 
     @classmethod
@@ -343,7 +371,7 @@ def pad_problem(problem: Problem, spec_pad: GenomeSpec,
                    problem.crossover_rate, problem.mutation_rate_gene,
                    problem.max_acc_loss, genes, jnp.asarray(out_mask),
                    problem.inv_n, problem.n_valid_samples,
-                   problem.variation_scale)
+                   problem.variation_scale, problem.generations_budget)
 
 
 # -- fitness ----------------------------------------------------------------
@@ -549,7 +577,7 @@ def init_state(problem: Problem, key, doping_seeds=None,
 
 # -- the generation step ----------------------------------------------------
 
-def generation(problem: Problem, state: GAState):
+def generation(problem: Problem, state: GAState, active=None):
     """One (μ+λ) NSGA-II generation; returns (state, aux) where aux is
     (best_err, best_area, n_evaluated_rows, n_cache_hits).
 
@@ -561,9 +589,61 @@ def generation(problem: Problem, state: GAState):
     the cross-generation cache on CPU, the variation+fitness megakernel on
     TPU, the per-phase oracle chain on request — every backend
     bit-identical in the resulting states (``GAConfig.generation_backend``).
+
+    ``active`` (optional () bool, per lane under vmap): when False, the
+    lane contributes zero rows to the shared dedup evaluation bound and
+    its EvalCache is left bitwise untouched; the caller is responsible for
+    where-selecting the non-cache state leaves (see ``run_scanned``).
     """
     from ..kernels.pop_generation import population_generation
-    return population_generation(problem, state)
+    return population_generation(problem, state, active=active)
+
+
+def lane_active(problem: Problem, state: GAState):
+    """() bool: whether this lane still has generation budget left."""
+    return state.gen < problem.generations_budget
+
+
+def _budgeted_generation(problem: Problem, state: GAState):
+    """Budget-gated generation step: a lane whose budget is exhausted is a
+    bitwise no-op carry passthrough (pop/obj/key/gen/cache untouched, aux
+    reporting zero evaluated rows), so ``repro.serve`` can park retired
+    lanes inside a shared vmapped scan at (almost) zero cost.
+
+    Skipping is two-level. Per lane, ``active`` flows into the dedup pack
+    so an inactive lane contributes 0 to the shared ``pmax`` evaluation
+    bound (its population tiles are genuinely skipped) and its EvalCache
+    sees no inserts or re-stamps; the surviving where-select then pins the
+    remaining state leaves. Across the whole batch, when *every* lane is
+    inactive the ``pmax``-reduced flag is an unbatched scalar, so the
+    ``lax.cond`` stays a real branch and the entire generation body is
+    skipped — the segment costs one cheap dead branch per generation.
+    """
+    active = lane_active(problem, state)
+    axis = problem.cfg.batch_axis
+    any_active = (active if axis is None else
+                  jax.lax.pmax(active.astype(jnp.int32), axis) > 0)
+
+    def live(st):
+        new, aux = generation(problem, st, active=active)
+        sel = lambda n, o: jnp.where(active, n, o)
+        # cache leaves need no select: the gated dedup pack already left a
+        # retired lane's table bitwise unchanged (zero inserts/re-stamps)
+        new = dataclasses.replace(
+            new, pop=sel(new.pop, st.pop), obj=sel(new.obj, st.obj),
+            viol=sel(new.viol, st.viol), rank=sel(new.rank, st.rank),
+            crowd=sel(new.crowd, st.crowd), counts=sel(new.counts, st.counts),
+            key=sel(new.key, st.key), gen=sel(new.gen, st.gen))
+        aux = (sel(aux[0], st.obj[:, 0].min()),
+               sel(aux[1], st.obj[:, 1].min()),
+               sel(aux[2], jnp.int32(0)), sel(aux[3], jnp.int32(0)))
+        return new, aux
+
+    def dead(st):
+        return st, (st.obj[:, 0].min(), st.obj[:, 1].min(),
+                    jnp.int32(0), jnp.int32(0))
+
+    return jax.lax.cond(any_active, live, dead, state)
 
 
 def run_scanned(problem: Problem, state: GAState, generations: int):
@@ -572,9 +652,20 @@ def run_scanned(problem: Problem, state: GAState, generations: int):
     Returns (final state, aux) with aux = (best_err, best_area, n_eval,
     n_hit), each of shape (generations,). The state carry — including the
     cross-generation EvalCache in the default dedup mode — lives inside
-    the scan, so the cache is updated in place across generations."""
+    the scan, so the cache is updated in place across generations.
+
+    With the static budget gate on (``cfg.generations_budget`` not None)
+    the body is :func:`_budgeted_generation`: each lane evolves only while
+    ``state.gen < problem.generations_budget`` and is a bitwise no-op
+    passthrough afterwards, which makes the scan *segment-resumable* —
+    calling it again on the returned state continues exactly where the
+    budget (not the segment length) says. The default None path compiles
+    to exactly the pre-budget program."""
+    step = (generation if problem.cfg.generations_budget is None
+            else _budgeted_generation)
+
     def body(s, _):
-        return generation(problem, s)
+        return step(problem, s)
 
     return jax.lax.scan(body, state, None, length=generations)
 

@@ -262,6 +262,41 @@ def suite_spec(problems) -> "engine.GenomeSpec":
     return genome_mod.GenomeSpec(topo)
 
 
+# -- lane composition (shared by run_suite and repro.serve) -----------------
+#
+# A "lane" is one (dataset, seed, hypers) run embedded into a shared
+# max-shape layout and tagged with the whole-run batch axis; a stack of
+# lanes is ONE batched Problem a single compiled vmapped program runs.
+# run_suite composes its lanes once per call (trace-time constants of that
+# dispatch); SearchServer composes them at *runtime* — admitting a job is
+# a scatter of one freshly padded lane into the standing stacked Problem.
+
+def pad_lane(problem: Problem, spec_pad: "engine.GenomeSpec",
+             n_samples: int) -> Problem:
+    """Embed ``problem`` into the shared ``spec_pad``/``n_samples`` layout
+    and tag it with the batch axis — one lane of a shared dispatch,
+    bit-identical to its unpadded sequential run (``engine.pad_problem``)."""
+    return engine.batch_problem(
+        engine.pad_problem(problem, spec_pad, n_samples))
+
+
+def stack_problems(problems) -> Problem:
+    """Stack same-shape lane Problems leaf-wise: every array leaf gains a
+    leading (n_lanes,) axis; the static aux (spec, cfg) must already agree
+    (``tree_map`` raises on mismatched statics)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *problems)
+
+
+def doped_lane_rows(doping_seeds, positions, n_genes: int, n_dope: int):
+    """Per-lane doping rows in the padded layout: the dataset's unpadded
+    doping genomes host-expanded to the ``n_dope``-row block (repeating
+    seeds exactly like ``engine.initial_population``) and scattered into
+    the shared gene axis."""
+    dope = np.asarray(engine._doping_array(doping_seeds))
+    reps = np.resize(np.arange(dope.shape[0]), n_dope)
+    return genome_mod.pad_genomes(dope[reps], positions, n_genes)
+
+
 def _run_suite_cells(problem: Problem, seeds, doping, generations: int):
     """vmap (init → scanned run) over the flat suite-cell axis. ``problem``
     is the stacked padded Problem (every leaf has a leading cell axis);
@@ -478,15 +513,12 @@ def run_suite(problems, seeds, *, crossover_rates=None, mutation_rates=None,
     for bucket in buckets:
         cell_problems, cell_dope, n_grid = [], [], None
         for d in bucket:
-            p = engine.batch_problem(
-                engine.pad_problem(problems[d], spec_pad, s_max))
+            p = pad_lane(problems[d], spec_pad, s_max)
             cells_d = grid_cells(seeds, crossover_rates, mutation_rates,
                                  max_acc_losses, baseline_accs, problem=p)
             if doping_seeds is not None:
-                dope = np.asarray(engine._doping_array(doping_seeds[d]))
-                reps = np.resize(np.arange(dope.shape[0]), n_dope)
-                dope_rows = genome_mod.pad_genomes(dope[reps], positions[d],
-                                                   spec_pad.n_genes)
+                dope_rows = doped_lane_rows(doping_seeds[d], positions[d],
+                                            spec_pad.n_genes, n_dope)
             for k in range(cells_d["seed"].shape[0]):
                 cell_problems.append(p.with_hypers(
                     jnp.float32(cells_d["crossover_rate"][k]),
@@ -504,8 +536,7 @@ def run_suite(problems, seeds, *, crossover_rates=None, mutation_rates=None,
             n_grid = cells_d["seed"].shape[0]
             grid_shape = cells_d["shape"]
 
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                         *cell_problems)
+        stacked = stack_problems(cell_problems)
         seed_arr = jnp.asarray(np.concatenate(
             [[m[1] for m in meta[d]] for d in bucket]).astype(np.int32))
         doping = (None if doping_seeds is None

@@ -39,7 +39,7 @@ from .kernel import pop_generation_kernel
 BACKENDS = ("auto", "kernel", "interpret", "ref", "phases")
 
 
-def _generation_kernel(problem, state, interpret: bool):
+def _generation_kernel(problem, state, interpret: bool, active=None):
     """Megakernel path: parent gather in XLA, variation+fitness fused in
     one pallas_call, ranking in XLA (through the ``pop_ranking``
     dispatcher, honouring ``GAConfig.ranking_backend``) — all inside the
@@ -80,27 +80,36 @@ def _generation_kernel(problem, state, interpret: bool):
         counts = jnp.zeros((2 * P,) + state.counts.shape[1:], jnp.int32)
     c_obj, c_viol = engine.objectives(
         problem, children, engine.counts_accuracy(problem, child_counts))
+    # the megakernel evaluates every child regardless of ``active`` (its
+    # win is VMEM fusion, not row skipping) — only the accounting is
+    # gated, so a retired lane reports zero evaluations like the jnp path
+    n_eval = (jnp.int32(P) if active is None
+              else jnp.where(active, P, 0).astype(jnp.int32))
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key,
-                            state.cache, jnp.int32(P), jnp.int32(0),
+                            state.cache, n_eval, jnp.int32(0),
                             backend=cfg.backends.ranking)
 
 
-def population_generation(problem, state, *, backend=None):
+def population_generation(problem, state, *, backend=None, active=None):
     """(Problem, GAState) → (new GAState, aux) — ONE (μ+λ) generation.
 
     aux = (best_err, best_area, n_eval, n_hit). ``backend`` overrides
-    ``problem.cfg.backends.generation``.
+    ``problem.cfg.backends.generation``. ``active`` (optional () bool) is
+    the serve path's per-lane retirement gate — see ``engine.generation``.
     """
     if backend is None:
         backend = problem.cfg.backends.generation
     if backend is None or backend == "auto":
         backend = "kernel" if jax.default_backend() == "tpu" else "ref"
     if backend == "ref":
-        return pop_generation_jnp(problem, state, use_cache=True)
+        return pop_generation_jnp(problem, state, use_cache=True,
+                                  active=active)
     if backend == "phases":
-        return pop_generation_jnp(problem, state, use_cache=False)
+        return pop_generation_jnp(problem, state, use_cache=False,
+                                  active=active)
     if backend in ("kernel", "interpret"):
         return _generation_kernel(problem, state,
-                                  interpret=(backend == "interpret"))
+                                  interpret=(backend == "interpret"),
+                                  active=active)
     raise ValueError(f"unknown generation backend {backend!r}; "
                      f"want {BACKENDS}")

@@ -43,10 +43,16 @@ def _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
     return new, aux
 
 
-def pop_generation_jnp(problem, state, use_cache: bool = True):
+def pop_generation_jnp(problem, state, use_cache: bool = True, active=None):
     """One generation, fused jnp — see module docstring.
 
     Returns (new_state, (best_err, best_area, n_eval, n_hit)).
+
+    ``active`` (optional () bool): the serve path's retirement gate — an
+    inactive lane contributes zero rows to the shared dedup evaluation
+    bound and leaves its EvalCache bitwise untouched; its returned state
+    is garbage the caller (``engine._budgeted_generation``) discards via
+    where-select.
     """
     from ...core import engine  # lazy: engine dispatches back into us
 
@@ -69,14 +75,15 @@ def pop_generation_jnp(problem, state, use_cache: bool = True):
         counts, n_eval, n_hit, cache = dedup_eval(
             eval_fn, pop, known=state.counts, axis_name=cfg.batch_axis,
             gene_mask=problem.genes.valid, cache=cache, gen=state.gen + 1,
-            ids=problem.genes.ids)
+            ids=problem.genes.ids, active=active)
         c_obj, c_viol = engine.objectives(
             problem, children, engine.counts_accuracy(problem, counts[P:]))
     elif mode != "off":
         # within-generation dedup only (the legacy/oracle path)
         counts, n_eval = dedup_eval(
             eval_fn, pop, known=state.counts, axis_name=cfg.batch_axis,
-            gene_mask=problem.genes.valid, ids=problem.genes.ids)
+            gene_mask=problem.genes.valid, ids=problem.genes.ids,
+            active=active)
         c_obj, c_viol = engine.objectives(
             problem, children, engine.counts_accuracy(problem, counts[P:]))
     else:
@@ -84,6 +91,7 @@ def pop_generation_jnp(problem, state, use_cache: bool = True):
         # count shape, which grows a K column under device-variation MC
         counts = jnp.zeros((2 * P,) + state.counts.shape[1:], jnp.int32)
         c_obj, c_viol = engine.fitness(problem, children)
-        n_eval = jnp.int32(P)
+        n_eval = (jnp.int32(P) if active is None
+                  else jnp.where(active, P, 0).astype(jnp.int32))
     return _rank_and_select(state, pop, counts, c_obj, c_viol, key, cache,
                             n_eval, n_hit, backend=cfg.backends.ranking)

@@ -44,6 +44,25 @@ def test_relative_regression_skipped_on_core_mismatch():
     assert any("cpu_count" in ln for ln in lines)
 
 
+def test_skipped_gates_are_enumerated_in_summary():
+    """The roll-up NOTE names every unenforced relative gate — a green
+    run can't silently skip a ratio without saying which one."""
+    _, lines = check(_full(3.0, cpu_count=4), _full(3.0, cpu_count=1), 0.20)
+    summary = [ln for ln in lines if "NOT enforced" in ln]
+    assert len(summary) == 1
+    for key in GATED_SPEEDUPS:
+        assert key in summary[0], f"{key} missing from the skip summary"
+
+
+def test_platform_mismatch_is_noted_but_passes():
+    base, fresh = _full(3.0), _full(3.0)
+    base["platform"], base["jax_version"] = "Linux-old", "0.4.0"
+    fresh["platform"], fresh["jax_version"] = "Linux-new", "0.5.0"
+    failures, lines = check(base, fresh, 0.20)
+    assert failures == []
+    assert any("platform/jax" in ln for ln in lines)
+
+
 def test_relative_regression_skipped_on_legacy_baseline():
     base = _full(3.0)
     del base["cpu_count"]          # baselines committed before the field
@@ -68,6 +87,11 @@ def test_missing_fresh_key_fails():
 
 def test_mc_overhead_ceiling_is_gated():
     assert ABSOLUTE_CEILINGS["mc_k8_overhead_vs_k1"] == 1.0
+
+
+def test_serve_speedup_is_gated():
+    assert "serve_throughput_speedup_vs_static" in GATED_SPEEDUPS
+    assert ABSOLUTE_FLOORS["serve_throughput_speedup_vs_static"] == 1.5
 
 
 def test_absolute_ceiling_unconditional():
