@@ -89,6 +89,16 @@ have a perf trajectory:
                                the sequential runs; summary ratio
                                ``serve_throughput_speedup_vs_static``
                                (steady-state warm passes both sides).
+  * ``serve_chaos``          — the same stream bare vs under the
+                               fault-tolerant ``Supervisor`` (per-segment
+                               lane validation + crc-stamped two-phase
+                               auto-checkpointing armed, fault-free);
+                               per-job results asserted bit-identical;
+                               summary ratio
+                               ``supervised_overhead_vs_bare`` (gated as
+                               an absolute < 1.10 ceiling — supervision
+                               must stay a <10% tax), plus a kill+recover
+                               pass timed as info.
 
 Every workload is seeded from ``common.BENCH_SEED`` (the ``--seed`` flag of
 ``benchmarks.run``), so two runs at the same seed score identical chromosome
@@ -740,6 +750,140 @@ def bench_serve(results, pop: int = 32, n_lanes: int = 4,
              f"|speedup_vs_sequential={seq_s / serve_s:.2f}x")
 
 
+def bench_serve_chaos(results, pop: int = 32, n_lanes: int = 4,
+                      segment_len: int = 16, checkpoint_every: int = 6):
+    """Fault-tolerance tax of the supervised serve path.
+
+    Same shape of heterogeneous job stream as ``bench_serve`` (two
+    datasets, interleaved 64..16 generation budgets) run two ways:
+
+      * bare       — ``SearchServer`` submit + drain, no supervision
+        (the PR-9 fast path).
+      * supervised — the same stream under ``Supervisor`` with the
+        full fault-tolerance machinery armed on a fault-free run:
+        per-segment lane validation (jitted vmap of
+        ``engine.validate_state``) AND two-phase-commit
+        auto-checkpointing every ``checkpoint_every`` segments
+        (crc-stamped leaves to a temp directory).
+
+    The gated ratio ``supervised_overhead_vs_bare`` =
+    supervised_s / bare_s compares warm steady-state passes; the
+    absolute ceiling in check_regression (< 1.10) is the contract that
+    supervision stays a <10% tax, so there is no reason to run serve
+    unsupervised. Both sides are asserted bit-identical per job, and a
+    kill+recover pass (drop the server after ``kill_after`` segments,
+    ``Supervisor.recover`` from the newest valid checkpoint, finish the
+    stream) is timed as info — recovery correctness itself is the chaos
+    test suite's job."""
+    import shutil
+    import tempfile
+
+    from repro.serve import ChaosPlan, ChaosKill, FaultPolicy, \
+        SearchServer, Supervisor
+
+    budgets = [64, 64, 32, 32, 24, 24, 16, 16, 16, 16, 16, 16]
+    names = ["cardio", "redwine"]
+    max_gens = max(budgets)
+    n_seeds = len(budgets) // len(names)
+    seeds = [common.BENCH_SEED + i for i in range(n_seeds)]
+
+    def cfg(seed, gens):
+        return GAConfig(pop_size=pop, generations=gens, seed=seed,
+                        backends=BackendPolicy(fitness="ref"), scan=True)
+
+    datasets = [load_dataset(n) for n in names]
+    problems = [engine.Problem.from_data(
+        MLPTopology(ds.topology), ds.x_train, ds.y_train,
+        cfg(seeds[0], max_gens)) for ds in datasets]
+    jobs = [(i % len(names), seeds[i // len(names)], budgets[i])
+            for i in range(len(budgets))]
+
+    def submit_all(target):
+        # names carry the dataset index so a recovery can resubmit any
+        # dropped-pending job against the right problem
+        return [target.submit(problems[d], generations=g, seed=s,
+                              name=f"{names[d]}/s{s}/g{g}")
+                for d, s, g in jobs]
+
+    srv = SearchServer.for_problems(problems, n_lanes=n_lanes,
+                                    segment_len=segment_len,
+                                    policy="longest")
+
+    def bare_pass():
+        ids = submit_all(srv)
+        return ids, {r.job_id: r for r in srv.drain()}
+
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_serve_chaos_")
+    try:
+        policy = FaultPolicy(checkpoint_every=checkpoint_every, keep=2)
+        sup = Supervisor(SearchServer.for_problems(
+            problems, n_lanes=n_lanes, segment_len=segment_len,
+            policy="longest"), policy, directory=ckpt_dir)
+
+        def supervised_pass():
+            ids = submit_all(sup)
+            return ids, {r.job_id: r for r in sup.drain()}
+
+        ids_b, bare_res = bare_pass()        # warm both sides (compile-
+        ids_s, sup_res = supervised_pass()   # cache hit) + oracle check
+        n_checkpoints = sup.stats["checkpoints"]   # one pass's worth
+        for jb, js in zip(ids_b, ids_s):
+            assert np.array_equal(bare_res[jb].front["objectives"],
+                                  sup_res[js].front["objectives"]), \
+                "supervised front diverged from bare serve"
+            assert bare_res[jb].unique_evals == sup_res[js].unique_evals
+        # the two sides differ by well under the box's slow timing drift,
+        # so time them INTERLEAVED and take per-side minima — a bare
+        # block then a supervised block would hand whichever runs later
+        # the warmer (or colder) machine and swamp the ratio
+        bare_t, sup_t = [], []
+        for _ in range(3):
+            bare_t.append(_timed(bare_pass))
+            sup_t.append(_timed(supervised_pass))
+        bare_s, supervised_s = min(bare_t), min(sup_t)
+
+        # kill + recover pass (info only): die mid-stream, restart from
+        # the newest valid checkpoint, finish the remaining segments
+        kill_after = 2 * checkpoint_every
+        chaos = ChaosPlan(kill_after_segment=sup.server.segments_done
+                          + kill_after)
+        sup2 = Supervisor(sup.server, policy, directory=ckpt_dir,
+                          chaos=chaos)
+        t0 = time.time()
+        submit_all(sup2)
+        try:
+            sup2.drain()
+        except ChaosKill:
+            pass
+        rec = Supervisor.recover(ckpt_dir, sup.server.spec,
+                                 problems[0].cfg, policy)
+        for meta in rec.dropped_pending:
+            d = names.index(meta["name"].split("/")[0])
+            rec.submit(problems[d], generations=meta["generations"],
+                       seed=meta["seed"], name=meta["name"])
+        rec.drain()
+        recover_s = time.time() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    overhead = supervised_s / bare_s
+    results["serve_chaos"] = {
+        "bare_s": bare_s, "supervised_s": supervised_s,
+        "kill_recover_s": recover_s, "n_jobs": len(jobs),
+        "n_lanes": n_lanes, "segment_len": segment_len, "pop": pop,
+        "checkpoint_every": checkpoint_every,
+        "checkpoints_per_pass": n_checkpoints,
+        "validate_every_segment": True, "fronts_bit_identical": True,
+        "recovered_step": rec.recovered_step}
+    results["supervised_overhead_vs_bare"] = overhead
+    emit_row("kernel/serve_chaos", supervised_s / len(jobs) * 1e6,
+             f"jobs={len(jobs)}|lanes={n_lanes}|ckpt_every="
+             f"{checkpoint_every}|bare_s={bare_s:.2f}"
+             f"|supervised_s={supervised_s:.2f}"
+             f"|kill_recover_s={recover_s:.2f}"
+             f"|overhead_vs_bare={overhead:.3f}x")
+
+
 def _timed(fn):
     t0 = time.time()
     fn()
@@ -771,6 +915,7 @@ def run():
     bench_fitness_swept(results)
     bench_fitness_suite(results)
     bench_serve(results)
+    bench_serve_chaos(results)
     base = results["fitness_eval"]["chromo_evals_per_s"]
     speedup = results["fitness_dispatch"]["chromo_evals_per_s"] / base
     results["dispatch_speedup_vs_seed"] = speedup
@@ -803,6 +948,8 @@ def run():
           f"{results['suite_speedup_vs_sequential']:.2f}x, "
           f"serve stream vs static max-shape dispatch: "
           f"{results['serve_throughput_speedup_vs_static']:.2f}x, "
+          f"supervised serve overhead vs bare: "
+          f"{results['supervised_overhead_vs_bare']:.3f}x, "
           f"MC-fitness K=8 batched vs sequential: "
           f"{results['mc_k8_overhead_vs_k1']:.2f}x "
           f"(→ {_RESULTS_PATH})")

@@ -12,7 +12,10 @@ nominal fronts. To sweep GA *hyperparameters* (mutation/crossover rates,
 the accuracy-loss bound) the same one-dispatch way, see `run_grid` in
 examples/hyperparam_sweep.py — and to run ALL FIVE paper
 datasets/topologies as one padded dispatch (the whole experiment table),
-see `run_suite` in examples/full_suite.py.
+see `run_suite` in examples/full_suite.py. To serve a *stream* of such
+searches as an always-on service — and to do it fault-tolerantly
+(`Supervisor` + `FaultPolicy`: auto-checkpointing, crash recovery, lane
+quarantine, backend fallback) — see examples/serve_jobs.py.
 
 Everything imports through ``repro.api`` — the package's stable public
 surface; scripts should not reach into ``repro.core.*`` internals.

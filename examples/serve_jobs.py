@@ -17,14 +17,25 @@ Every retired job is bit-identical to its standalone sequential
 `GATrainer.run` — the demo checks one job against its trainer to prove
 it. See `repro/serve/__init__.py` for the architecture notes and
 `benchmarks/kernel_bench.bench_serve` for the throughput numbers.
+
+Act two is the fault-tolerant runtime: the same stream under
+`Supervisor` (auto-checkpointing every 2 segments, per-segment lane
+health checks) with a scheduled `ChaosPlan` kill mid-stream — the
+process "dies", `Supervisor.recover` restarts from the newest valid
+checkpoint, the never-admitted job comes back via `dropped_pending`,
+and every job still retires bit-identical. See the **Serve-path
+architecture → Fault tolerance** section of ROADMAP.md.
 """
 import dataclasses
+import shutil
+import tempfile
 
 import numpy as np
 
 from repro.api import GAConfig, GATrainer, MLPTopology, Problem
 from repro.data import load_dataset
-from repro.serve import SearchServer
+from repro.serve import (ChaosKill, ChaosPlan, FaultPolicy, SearchServer,
+                         Supervisor)
 
 POP, SEGMENT = 32, 8
 
@@ -85,6 +96,61 @@ def main():
                           tr.front(state)["objectives"])
     print(f"\n{name}/s{seed}/g{gens} front bit-identical to its standalone "
           f"GATrainer.run — the serve path changes scheduling, not numerics")
+
+    supervised_crash_demo(problems, done)
+
+
+def supervised_crash_demo(problems, bare_results):
+    """Kill the service mid-stream, recover from the newest valid
+    checkpoint, and finish the same jobs bit-identical to the
+    uninterrupted run above."""
+    print("\n--- supervised crash demo ---")
+    stream = [("cardio", 32, 0), ("redwine", 16, 0), ("cardio", 16, 1)]
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_jobs_ckpt_")
+    try:
+        policy = FaultPolicy(checkpoint_every=2)   # + lane health checks
+        chaos = ChaosPlan(kill_after_segment=2)    # "power cut" at seg 3
+        sup = Supervisor.for_problems(
+            [problems[n] for n in ("cardio", "redwine")], policy,
+            directory=ckpt_dir, chaos=chaos, n_lanes=2,
+            segment_len=SEGMENT, scheduler_policy="longest")
+        for dsname, gens, seed in stream:
+            sup.submit(problems[dsname], generations=gens, seed=seed,
+                       name=f"{dsname}/s{seed}/g{gens}")
+        results = {}    # results delivered before the crash stay delivered
+        try:
+            while sup.server.has_work:
+                for r in sup.step():
+                    results[r.name] = r
+        except ChaosKill:
+            print(f"process killed after segment "
+                  f"{sup.server.segments_done} — "
+                  f"{sup.stats['checkpoints']} checkpoint(s) committed, "
+                  f"{len(results)} job(s) already delivered")
+
+        spec, cfg0 = sup.server.spec, problems["cardio"].cfg
+        rec = Supervisor.recover(ckpt_dir, spec, cfg0, policy)
+        print(f"recovered from checkpoint step {rec.recovered_step}; "
+              f"{len(rec.dropped_pending)} queued job(s) handed back")
+        for meta in rec.dropped_pending:   # never reached a lane: resubmit
+            rec.submit(problems[meta["name"].split("/")[0]],
+                       generations=meta["generations"], seed=meta["seed"],
+                       name=meta["name"])
+        for r in rec.drain():
+            results[r.name] = r
+
+        bare = {r.name: r for r in bare_results}
+        for dsname, gens, seed in stream:
+            jname = f"{dsname}/s{seed}/g{gens}"
+            r = results[jname]
+            assert r.ok, r.error
+            if jname in bare:
+                assert np.array_equal(r.front["objectives"],
+                                      bare[jname].front["objectives"])
+        print(f"all {len(stream)} jobs survived the crash bit-identical — "
+              f"checkpoint + recovery change availability, not numerics")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

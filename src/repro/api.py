@@ -32,6 +32,14 @@ standalone sequential ``GATrainer.run`` of that job. The server advances
 all lanes in fixed-size compiled segments and admits/retires jobs at
 segment boundaries (see ``repro.serve`` and ``examples/serve_jobs.py``);
 ``SearchServer.save``/``restore`` checkpoint in-flight jobs resumably.
+
+For long-lived or hostile environments wrap the server in a
+``Supervisor`` under a ``FaultPolicy``: periodic auto-checkpointing
+through the two-phase-commit store, crash recovery from the latest
+*valid* checkpoint (``Supervisor.recover``), per-lane health validation
+with quarantine, capped-backoff retry of transient faults, a segment
+watchdog, and a backend fallback chain — all deterministic-fault-tested
+via ``repro.serve.chaos`` (ROADMAP "Serve-path architecture").
 """
 from __future__ import annotations
 
@@ -61,7 +69,7 @@ from .core.hw_approx_search import LMApproxSearch, FORMATS     # noqa: F401
 from .kernels import (BackendPolicy, resolve_backends,         # noqa: F401
                       BACKEND_CHOICES)
 from .serve import (SearchServer, SearchJob, JobResult,        # noqa: F401
-                    LaneScheduler)
+                    LaneScheduler, Supervisor, FaultPolicy)
 
 __all__ = [
     # genome / problem setup
@@ -84,8 +92,9 @@ __all__ = [
     "emit_verilog", "evaluate_genome_python", "evaluate_genome_instances",
     # LM-scale post-training approximation search
     "LMApproxSearch", "FORMATS",
-    # continuous-batching search service
+    # continuous-batching search service + fault-tolerant supervision
     "SearchServer", "SearchJob", "JobResult", "LaneScheduler",
+    "Supervisor", "FaultPolicy",
 ]
 
 

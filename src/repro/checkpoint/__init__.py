@@ -1,1 +1,8 @@
-from .manager import CheckpointManager, save_checkpoint, restore_checkpoint
+from .manager import (CheckpointManager, CheckpointCorruptError,
+                      save_checkpoint, restore_checkpoint,
+                      verify_checkpoint, latest_step, latest_valid_step,
+                      list_steps)
+
+__all__ = ["CheckpointManager", "CheckpointCorruptError", "save_checkpoint",
+           "restore_checkpoint", "verify_checkpoint", "latest_step",
+           "latest_valid_step", "list_steps"]

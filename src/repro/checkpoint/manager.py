@@ -9,7 +9,11 @@ Layout per step:
 Guarantees:
   * atomic commit: written into ``step_XXX.tmp`` then os.rename (readers
     never observe a partial checkpoint),
-  * integrity: crc32 per leaf, verified on restore,
+  * integrity: crc32 per leaf over BOTH the array payload and the raw
+    ``.npy`` file bytes (``file_crc32``/``file_size``), verified on
+    restore *before* deserializing — a truncated or bit-flipped file is
+    rejected with :class:`CheckpointCorruptError` instead of feeding
+    garbage (or a raw numpy parse error) to the caller,
   * elastic restore: arrays are placed with whatever NamedSharding the
     *restoring* job provides — loading on a different mesh shape/axis layout
     is just a different device_put (reshard-on-load),
@@ -17,12 +21,21 @@ Guarantees:
     file I/O runs on a worker thread,
   * GC: keep the latest ``keep`` checkpoints.
 
+Fault-tolerant consumers (``repro.serve.supervisor``) never trust a
+single step blindly: :func:`verify_checkpoint` checks a whole step's
+integrity without building a restore target, and
+:func:`latest_valid_step` walks steps newest→oldest to find the most
+recent one that verifies — a crash mid-``_write`` leaves only a
+``.tmp`` directory (invisible to ``latest_step``), and post-commit
+corruption (bit rot, truncation) skips back to the previous commit.
+
 On a real multi-host pod each process writes only the shards it owns
 (`addressable_shards`); this container is single-process so leaves are saved
 whole. The manifest format is host-count independent.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
@@ -32,6 +45,13 @@ from typing import Optional
 
 import numpy as np
 import jax
+
+
+class CheckpointCorruptError(IOError):
+    """A checkpoint failed integrity verification (truncated file, crc
+    mismatch, unreadable manifest, missing leaf). Restores raise this
+    instead of whatever deserialization error the damage would cause;
+    recovery code catches it and falls back to an older step."""
 
 
 def _leaf_name(path) -> str:
@@ -44,6 +64,12 @@ def _leaf_name(path) -> str:
         else:
             parts.append(str(p))
     return "__".join(parts) or "root"
+
+
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue()
 
 
 def save_checkpoint(directory: str, step: int, state, *, keep: int = 3,
@@ -61,12 +87,18 @@ def save_checkpoint(directory: str, step: int, state, *, keep: int = 3,
         os.makedirs(tmp, exist_ok=True)
         manifest = {"step": step, "leaves": {}}
         for name, arr in host:
-            fn = os.path.join(tmp, name + ".npy")
-            np.save(fn, arr)
+            raw = _npy_bytes(arr)
+            with open(os.path.join(tmp, name + ".npy"), "wb") as f:
+                f.write(raw)
             manifest["leaves"][name] = {
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
                 "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+                # raw-file twin of the payload crc: verified BEFORE
+                # np.load, so truncation/bit-flips anywhere in the file
+                # (header included) are caught without deserializing
+                "file_crc32": zlib.crc32(raw) & 0xFFFFFFFF,
+                "file_size": len(raw),
             }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -92,12 +124,95 @@ def _gc(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str) -> list[int]:
+    """All committed checkpoint steps under ``directory``, ascending.
+    ``.tmp`` directories (uncommitted two-phase writes) never appear."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if re.fullmatch(r"step_\d+", d)]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if re.fullmatch(r"step_\d+", d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _load_manifest(directory: str, step: int) -> dict:
+    d = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} under {directory} has no manifest "
+            "(partial write?)") from e
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} under {directory}: unreadable "
+            f"manifest: {e}") from e
+
+
+def _read_leaf_file(d: str, name: str, meta: dict,
+                    verify: bool) -> np.ndarray:
+    """Read one leaf ``.npy``, verifying raw bytes before deserializing."""
+    fn = os.path.join(d, name + ".npy")
+    try:
+        with open(fn, "rb") as f:
+            raw = f.read()
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint leaf {name!r} missing ({fn})") from e
+    if verify and "file_size" in meta:
+        if len(raw) != meta["file_size"]:
+            raise CheckpointCorruptError(
+                f"checkpoint corruption in leaf {name!r}: file is "
+                f"{len(raw)} bytes, manifest says {meta['file_size']} "
+                "(truncated write?)")
+        crc = zlib.crc32(raw) & 0xFFFFFFFF
+        if crc != meta["file_crc32"]:
+            raise CheckpointCorruptError(
+                f"checkpoint corruption in leaf {name!r}: file crc {crc} "
+                f"!= {meta['file_crc32']} (bit-flipped file)")
+    try:
+        arr = np.load(io.BytesIO(raw))
+    except Exception as e:           # pre-file_crc32 manifests only
+        raise CheckpointCorruptError(
+            f"checkpoint leaf {name!r} failed to deserialize: {e}") from e
+    if verify:
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"checkpoint corruption in leaf {name!r}: payload crc "
+                f"{crc} != {meta['crc32']}")
+    return arr
+
+
+def verify_checkpoint(directory: str, step: int):
+    """Verify EVERY leaf of one committed checkpoint (sizes + crcs).
+
+    Raises :class:`CheckpointCorruptError` on the first damaged leaf;
+    returns the manifest when the whole step is intact. Unlike
+    ``restore_checkpoint`` this needs no target template, so recovery can
+    vet a checkpoint before knowing its tree structure."""
+    manifest = _load_manifest(directory, step)
+    d = os.path.join(directory, f"step_{step:08d}")
+    for name, meta in manifest["leaves"].items():
+        _read_leaf_file(d, name, meta, verify=True)
+    return manifest
+
+
+def latest_valid_step(directory: str) -> Optional[int]:
+    """The newest step that passes :func:`verify_checkpoint` — the restore
+    point crash recovery should use. Corrupt steps are skipped (newest
+    first); returns None when no valid checkpoint exists."""
+    for step in reversed(list_steps(directory)):
+        try:
+            verify_checkpoint(directory, step)
+            return step
+        except CheckpointCorruptError:
+            continue
+    return None
 
 
 def read_leaf(directory: str, step: int, name: str, *,
@@ -112,17 +227,13 @@ def read_leaf(directory: str, step: int, name: str, *,
     it), reads it back with this, and only then knows the lane/segment
     geometry needed to build the restore target for the full pytree.
     """
+    manifest = _load_manifest(directory, step)
+    if name not in manifest["leaves"]:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} has no leaf {name!r} "
+            f"(leaves: {sorted(manifest['leaves'])})")
     d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    meta = manifest["leaves"][name]
-    arr = np.load(os.path.join(d, name + ".npy"))
-    if verify:
-        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
-        if crc != meta["crc32"]:
-            raise IOError(f"checkpoint corruption in leaf {name!r}: "
-                          f"crc {crc} != {meta['crc32']}")
-    return arr
+    return _read_leaf_file(d, name, manifest["leaves"][name], verify)
 
 
 def restore_checkpoint(directory: str, step: int, target, *,
@@ -130,9 +241,8 @@ def restore_checkpoint(directory: str, step: int, target, *,
     """Restore into the structure of ``target`` (pytree of arrays or
     ShapeDtypeStructs). ``shardings``: optional matching pytree of
     NamedSharding for elastic placement on the restoring mesh."""
+    manifest = _load_manifest(directory, step)
     d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
@@ -140,13 +250,11 @@ def restore_checkpoint(directory: str, step: int, target, *,
     out = []
     for (path, tgt), shard in zip(paths, shard_leaves):
         name = _leaf_name(path)
-        meta = manifest["leaves"][name]
-        arr = np.load(os.path.join(d, name + ".npy"))
-        if verify:
-            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
-            if crc != meta["crc32"]:
-                raise IOError(f"checkpoint corruption in leaf {name!r}: "
-                              f"crc {crc} != {meta['crc32']}")
+        if name not in manifest["leaves"]:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} has no leaf {name!r} the restore "
+                "target expects (incompatible or damaged manifest)")
+        arr = _read_leaf_file(d, name, manifest["leaves"][name], verify)
         want_dtype = getattr(tgt, "dtype", arr.dtype)
         arr = arr.astype(want_dtype)
         out.append(jax.device_put(arr, shard) if shard is not None

@@ -168,6 +168,17 @@ class GAConfig:
                 "backend (auto/kernel/interpret/ref): the 'jnp' oracle "
                 "has no device-instance axis")
 
+    def with_backends(self, backends) -> "GAConfig":
+        """Swap the whole :class:`BackendPolicy` — the ONLY safe way.
+
+        A bare ``dataclasses.replace(cfg, backends=...)`` re-runs
+        ``__post_init__`` with the *mirrored* legacy ``*_backend`` fields
+        still holding the OLD names, which silently overrides the new
+        policy back to the old one. This clears the mirrors first (the
+        serve supervisor's backend-fallback path relies on it)."""
+        clear = {field: None for _, field in _LEGACY_BACKEND_FIELDS}
+        return dataclasses.replace(self, backends=backends, **clear)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -734,6 +745,71 @@ def run_batch(problem: Problem, seeds, generations: int | None = None,
 def state_at(states: GAState, i: int) -> GAState:
     """Peel run ``i`` off a batched GAState."""
     return jax.tree_util.tree_map(lambda a: a[i], states)
+
+
+# -- lane health validation (the serve supervisor's boundary check) ---------
+
+# check names, index-aligned with the validate_state result vector
+VALIDATION_CHECKS = ("finite_objectives", "genome_in_bounds",
+                     "counts_in_range", "cache_accounting")
+
+
+def validate_state(problem: Problem, state: GAState) -> jnp.ndarray:
+    """Device-side engine-invariant checks for ONE lane, reduced to a
+    (len(VALIDATION_CHECKS),) bool vector (index-aligned with the names).
+
+    The checks are chosen so a *healthy* state can never trip them — they
+    are exactly the invariants every generation step preserves — while a
+    poisoned lane (NaN objectives from numerically-corrupt data, an
+    out-of-bounds genome from a bad doping seed or bit-flipped buffer,
+    impossible correct counts, a cache whose accounting ran ahead of the
+    generation clock) fails loudly:
+
+      * ``finite_objectives`` — every objective is finite and every
+        constraint violation is finite and non-negative (crowding is
+        allowed its by-design +inf boundary values, so it is NOT checked
+        for finiteness — only the inputs the ranking derives from are).
+      * ``genome_in_bounds``  — every gene lies in its GeneTable bounds
+        ``[low, high)``; padding genes have bounds ``[0, 1)`` so the same
+        comparison also enforces the canonical-zero padding rule.
+      * ``counts_in_range``   — cached correct counts lie in
+        ``[0, n_valid_samples]`` (zeros when dedup is off, so trivially
+        true there; elementwise, so the MC (P, K) shape checks too).
+      * ``cache_accounting``  — live EvalCache entries (stamp ≥ 0) hold
+        in-range counts and no stamp exceeds the lane's generation clock
+        (inserts are stamped with the generation that produced them).
+        Constant True when the state carries no cache.
+
+    Pure and vmappable: ``repro.serve.supervisor`` jits
+    ``vmap(validate_state)`` over the stacked serve lanes and pulls ONE
+    (n_lanes, n_checks) bool array per segment boundary, quarantining any
+    busy lane with a False entry instead of letting it poison siblings.
+    """
+    t = problem.genes
+    finite = (jnp.isfinite(state.obj).all()
+              & jnp.isfinite(state.viol).all()
+              & (state.viol >= 0.0).all())
+    in_bounds = ((state.pop >= t.low[None, :])
+                 & (state.pop < t.high[None, :])).all()
+    n = problem.n_valid_samples
+    counts_ok = ((state.counts >= 0) & (state.counts <= n)).all()
+    if state.cache is None:
+        cache_ok = jnp.bool_(True)
+    else:
+        live = state.cache.stamp >= 0
+        vals = state.cache.vals
+        # vals is (C,) or (C, K); broadcast the live mask over trailing axes
+        live_v = live.reshape(live.shape + (1,) * (vals.ndim - 1))
+        vals_ok = jnp.where(live_v, (vals >= 0) & (vals <= n), True).all()
+        stamp_ok = jnp.where(live, state.cache.stamp <= state.gen,
+                             True).all()
+        cache_ok = vals_ok & stamp_ok
+    return jnp.stack([finite, in_bounds, counts_ok, cache_ok])
+
+
+def validate_ok(problem: Problem, state: GAState) -> jnp.ndarray:
+    """() bool — all :data:`VALIDATION_CHECKS` hold for this lane."""
+    return validate_state(problem, state).all()
 
 
 # -- host-side output -------------------------------------------------------

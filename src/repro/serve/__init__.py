@@ -27,5 +27,12 @@ bound (``engine._budgeted_generation``).
 from .jobs import SearchJob, JobResult            # noqa: F401
 from .scheduler import LaneScheduler              # noqa: F401
 from .server import SearchServer                  # noqa: F401
+from .supervisor import (Supervisor, FaultPolicy,            # noqa: F401
+                         SegmentTimeoutError, LaneValidationError)
+from .chaos import (ChaosPlan, SegmentFault, ChaosIOError,   # noqa: F401
+                    ChaosKill, corrupt_checkpoint)
 
-__all__ = ["SearchJob", "JobResult", "LaneScheduler", "SearchServer"]
+__all__ = ["SearchJob", "JobResult", "LaneScheduler", "SearchServer",
+           "Supervisor", "FaultPolicy", "SegmentTimeoutError",
+           "LaneValidationError", "ChaosPlan", "SegmentFault",
+           "ChaosIOError", "ChaosKill", "corrupt_checkpoint"]

@@ -37,13 +37,26 @@ class JobResult:
     ``cache_hits`` count exactly what that trainer would report. The
     returned state drops the lane's EvalCache (device-resident scratch,
     not a result).
+
+    Fault-tolerance fields (PR 10): ``ok`` is False for a *quarantined*
+    job — one whose lane tripped ``engine.validate_state`` — in which
+    case ``error`` carries the diagnostics, ``front`` is None and
+    ``state`` is the (suspect) lane state kept for forensics.
+    ``generations_run`` counts generations actually executed: equal to
+    ``generations`` on normal retirement, smaller when the supervisor
+    retired the lane early (``converged=True``, front stable for
+    ``FaultPolicy.patience`` segments) or quarantined it mid-budget.
     """
     job_id: int
     name: str | None
-    front: dict
+    front: dict | None
     state: GAState
     generations: int
     unique_evals: int
     cache_hits: int
     admitted_segment: int
     retired_segment: int
+    ok: bool = True
+    error: str | None = None
+    generations_run: int | None = None
+    converged: bool = False

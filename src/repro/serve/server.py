@@ -121,6 +121,9 @@ class SearchServer:
         self._jobs: dict[int, _JobRecord] = {}
         self._next_id = 0
         self._segments_done = 0
+        # populated by restore(): queued jobs an allow_pending save
+        # recorded but could not serialize; resubmit to keep them
+        self.dropped_pending: list[dict] = []
         self._null = self._null_problem()
         null_state, _ = _init_lane_jit(
             dataclasses.replace(self._null, cfg=self._cfg_init),
@@ -178,7 +181,8 @@ class SearchServer:
         rec.cache_hits = 0
         rec.admitted_segment = self._segments_done
 
-    def _retire(self, lane: int, job_id: int) -> JobResult:
+    def _retire(self, lane: int, job_id: int, *,
+                converged: bool = False) -> JobResult:
         rec = self._jobs[job_id]
         st = engine.state_at(self._states, lane)
         st = dataclasses.replace(st, pop=st.pop[:, rec.positions], cache=None)
@@ -187,7 +191,9 @@ class SearchServer:
             state=st, generations=rec.generations,
             unique_evals=rec.unique_evals, cache_hits=rec.cache_hits,
             admitted_segment=rec.admitted_segment,
-            retired_segment=self._segments_done)
+            retired_segment=self._segments_done,
+            generations_run=rec.generations - max(rec.remaining, 0),
+            converged=converged)
         # park the lane on the null problem: budget 0 keeps it a no-op
         # passthrough and its 1-sample bound stops inflating the shared
         # sample-tile pmax (the lane's stale state is inert garbage)
@@ -195,6 +201,52 @@ class SearchServer:
         rec.lane = None
         self._sched.free(lane)
         return result
+
+    # -- fault-tolerance hooks (driven by serve.supervisor) -----------------
+
+    def retire_lane(self, lane: int, *, converged: bool = False) -> JobResult:
+        """Force-retire a busy lane mid-budget (supervisor convergence
+        retirement). The result is a healthy ``JobResult`` whose
+        ``generations_run`` records how far the lane actually got."""
+        job_id = self._sched.lane_job[lane]
+        if job_id is None:
+            raise ValueError(f"lane {lane} has no job to retire")
+        return self._retire(lane, job_id, converged=converged)
+
+    def quarantine_lane(self, lane: int, error: str) -> JobResult:
+        """Retire a busy lane as FAILED: its state tripped validation.
+
+        The lane's (suspect) state is still peeled into the result for
+        forensics, but ``front`` is None and ``ok`` is False; the slot is
+        parked on the null problem and freed so sibling lanes and future
+        admissions are untouched — per-lane vmap slices and per-lane
+        caches mean a poisoned lane cannot have perturbed its siblings.
+        """
+        job_id = self._sched.lane_job[lane]
+        if job_id is None:
+            raise ValueError(f"lane {lane} has no job to quarantine")
+        rec = self._jobs[job_id]
+        st = engine.state_at(self._states, lane)
+        st = dataclasses.replace(st, pop=st.pop[:, rec.positions], cache=None)
+        result = JobResult(
+            job_id=job_id, name=rec.name, front=None, state=st,
+            generations=rec.generations, unique_evals=rec.unique_evals,
+            cache_hits=rec.cache_hits,
+            admitted_segment=rec.admitted_segment,
+            retired_segment=self._segments_done, ok=False, error=error,
+            generations_run=rec.generations - max(rec.remaining, 0))
+        self._problems = _set_lane(self._problems, lane, self._null)
+        rec.lane = None
+        self._sched.free(lane)
+        return result
+
+    def lane_state(self, lane: int) -> GAState:
+        """The full padded GAState of one lane (cache included) — the
+        view ``engine.validate_state`` checks at segment boundaries."""
+        return engine.state_at(self._states, lane)
+
+    def lane_problem(self, lane: int) -> Problem:
+        return jax.tree_util.tree_map(lambda x: x[lane], self._problems)
 
     # -- the service loop ---------------------------------------------------
 
@@ -263,6 +315,11 @@ class SearchServer:
         return self._segments_done
 
     @property
+    def has_work(self) -> bool:
+        """True while any job is queued or in a lane."""
+        return self._sched.has_work
+
+    @property
     def pending_jobs(self) -> list[int]:
         return list(self._sched.pending)
 
@@ -274,16 +331,32 @@ class SearchServer:
 
     # -- checkpointing ------------------------------------------------------
 
-    def save(self, directory: str, *, keep: int = 3) -> str:
+    def save(self, directory: str, *, keep: int = 3,
+             allow_pending: bool = False) -> str:
         """Checkpoint the in-flight lanes (states + problems + scheduler
         metadata) atomically; resumable with :meth:`restore` into a
-        bit-identical continuation. The queue must be empty — pending
-        jobs hold host-side Problems this store does not serialize —
-        and retired results must already have been consumed from
-        ``step()``/``drain()`` returns."""
-        if self._sched.pending:
+        bit-identical continuation. By default the queue must be empty —
+        pending jobs hold host-side Problems this store does not
+        serialize — and retired results must already have been consumed
+        from ``step()``/``drain()`` returns.
+
+        ``allow_pending=True`` (the supervisor's auto-checkpoint mode)
+        saves anyway, recording each queued job's (id, name, generations,
+        seed) in the manifest: after :meth:`restore` those ride in
+        ``dropped_pending`` for the caller to resubmit with their
+        Problems. The serve contract makes this safe — a job's result is
+        bit-identical whichever segment admits it."""
+        if self._sched.pending and not allow_pending:
             raise ValueError("cannot save with pending jobs queued: admit "
-                             "them (step()) or drain first")
+                             "them (step()) or drain first, or pass "
+                             "allow_pending=True to record them for "
+                             "resubmission after restore")
+        pending = []
+        for job_id in self._sched.pending:
+            rec = self._jobs[job_id]
+            pending.append({"job_id": rec.job_id, "name": rec.name,
+                            "generations": rec.generations,
+                            "seed": rec.seed})
         lanes = []
         for lane in range(self.n_lanes):
             job_id = self._sched.lane_job[lane]
@@ -302,7 +375,8 @@ class SearchServer:
                 "max_samples": self.max_samples,
                 "segments_done": self._segments_done,
                 "next_id": self._next_id, "policy": self._sched.policy,
-                "cfg": repr(_canon_cfg(self._cfg)), "lanes": lanes}
+                "cfg": repr(_canon_cfg(self._cfg)), "lanes": lanes,
+                "pending": pending}
         blob = np.frombuffer(json.dumps(meta).encode(), np.uint8).copy()
         payload = (self._states, self._problems, blob)
         return ckpt.save_checkpoint(directory, self._segments_done, payload,
@@ -345,4 +419,7 @@ class SearchServer:
                 admitted_segment=lm["admitted_segment"])
             srv._jobs[rec.job_id] = rec
             srv._sched.occupy(lane, rec.job_id)
+        # queued jobs recorded by allow_pending saves: their Problems are
+        # not serialized, so they come back as metadata for resubmission
+        srv.dropped_pending = list(meta.get("pending", []))
         return srv

@@ -1,0 +1,250 @@
+"""The deterministic fault-injection suite (`repro.serve.chaos`) — the
+acceptance tests of ISSUE 10's tentpole:
+
+under an injected fault schedule (transient IO errors, a NaN-poisoned
+lane, a bit-rotted checkpoint, a mid-stream process kill) the supervised
+server (1) retries the transients with capped backoff, (2) quarantines
+EXACTLY the poisoned jobs, (3) recovers from the newest *valid*
+checkpoint after the kill, and (4) retires every healthy job bit-identical
+to its standalone sequential ``GATrainer.run`` — states, fronts and
+eval accounting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GAConfig, GATrainer
+from repro.core import engine
+from repro.core.genome import MLPTopology
+from repro.serve import (ChaosIOError, ChaosKill, ChaosPlan, FaultPolicy,
+                         SegmentFault, Supervisor)
+
+STATE_FIELDS = ("pop", "obj", "viol", "rank", "crowd", "counts", "key", "gen")
+
+
+def assert_states_equal(a, b, msg=""):
+    for name in STATE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{msg}: GAState.{name} differs")
+
+
+def _make(seed, n_samples, sizes):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n_samples, sizes[0])).astype(np.float32)
+    y = (x.sum(axis=1) > sizes[0] / 2).astype(np.int32)
+    return MLPTopology(sizes), x, y
+
+
+@pytest.fixture(scope="module")
+def stream():
+    cfg = GAConfig(pop_size=16, generations=8)
+    a = _make(1, 64, (4, 4, 2))
+    b = _make(2, 96, (5, 6, 2))
+    pa = engine.Problem.from_data(a[0], a[1], a[2], cfg)
+    pb = engine.Problem.from_data(b[0], b[1], b[2], cfg)
+    return {"a": (a, pa), "b": (b, pb), "cfg": cfg}
+
+
+def _trainer(data, cfg, seed, generations):
+    topo, x, y = data
+    tr = GATrainer(topo, x, y, dataclasses.replace(cfg, seed=seed,
+                                                   generations=generations))
+    state, _ = tr.run()
+    return tr, state
+
+
+def _assert_healthy_match(result, data, cfg, seed):
+    assert result.ok, result.error
+    tr, state = _trainer(data, cfg, seed, result.generations_run)
+    assert_states_equal(result.state, state, result.name)
+    assert result.unique_evals == tr.unique_evals
+    assert result.cache_hits == tr.cache_hits
+    np.testing.assert_array_equal(result.front["objectives"],
+                                  tr.front(state)["objectives"])
+
+
+def test_full_fault_schedule_survived(stream, tmp_path):
+    """The headline chaos run, one deterministic schedule:
+
+      seg 1: lane 0 poisoned (NaN objectives) → victim quarantined,
+             THEN the first auto-save hiccups (transient IO error,
+             retried) and commits step 2 — post-quarantine, with the
+             still-queued "late" job recorded as pending
+      seg 3: auto-save commits step 4, which then silently bit-rots
+      seg 4: process killed mid-stream (long job still in flight)
+
+    Recovery must skip the rotted step 4 back to valid step 2, keep the
+    victim quarantined (it was gone before step 2 committed), hand the
+    never-admitted job back via ``dropped_pending``, and finish every
+    healthy job bit-identical to its standalone trainer."""
+    (da, pa), (db, pb), cfg = stream["a"], stream["b"], stream["cfg"]
+    sleeps = []
+    chaos = ChaosPlan(io_errors=(1,),
+                      poison={1: 0}, poison_leaf="obj",
+                      corrupt_steps=(4,), corrupt_kind="bitflip",
+                      kill_after_segment=4)
+    sup = Supervisor.for_problems(
+        [pa, pb], FaultPolicy(checkpoint_every=2, backoff_base_s=0.0),
+        directory=str(tmp_path), chaos=chaos, sleep=sleeps.append,
+        n_lanes=2, segment_len=4, scheduler_policy="longest")
+    jobs = {"victim": (da, pa, 32, 0), "long": (db, pb, 24, 1),
+            "late": (da, pa, 8, 2)}
+    ids = {name: sup.submit(p, generations=g, seed=s, name=name)
+           for name, (_, p, g, s) in jobs.items()}
+    results = {}
+    with pytest.raises(ChaosKill):
+        while sup.server.has_work:
+            for r in sup.step():
+                results[r.name] = r
+    assert sup.stats["retries"] >= 1 and len(sleeps) >= 1
+    assert sup.stats["quarantined"] == 1
+    victim = results["victim"]
+    assert victim.ok is False and victim.job_id == ids["victim"]
+    assert "finite_objectives" in victim.error
+    assert victim.generations_run == 8     # two 4-gen segments ran
+
+    # recovery: step 4 is bit-rotted, so the valid restore point is 2
+    spec = sup.server.spec
+    sup2 = Supervisor.recover(str(tmp_path), spec, pa.cfg,
+                              FaultPolicy(checkpoint_every=2))
+    assert sup2.recovered_step == 2
+    # "late" never reached a lane before step 2 committed: it comes
+    # back as recorded pending metadata and is resubmitted by name
+    assert [p["name"] for p in sup2.dropped_pending] == ["late"]
+    meta = sup2.dropped_pending[0]
+    sup2.submit(pa, generations=meta["generations"], seed=meta["seed"],
+                name=meta["name"])
+    for r in sup2.drain():
+        results[r.name] = r
+
+    assert set(results) == set(jobs)
+    for name in ("long", "late"):
+        data, _, gens, seed = jobs[name]
+        assert results[name].generations_run == gens
+        _assert_healthy_match(results[name], data, cfg, seed)
+    assert not results["victim"].ok, "quarantine must not resurrect"
+
+
+@pytest.mark.parametrize("leaf,check", [
+    ("obj", "finite_objectives"),
+    ("pop", "genome_in_bounds"),
+    ("counts", "counts_in_range"),
+])
+def test_quarantine_is_exact(stream, leaf, check):
+    """Whatever leaf is poisoned, ONLY that lane's job fails — and it
+    fails naming the tripped invariant; the sibling lane retires
+    bit-identical to its trainer."""
+    (da, pa), (db, pb), cfg = stream["a"], stream["b"], stream["cfg"]
+    chaos = ChaosPlan(poison={1: 0}, poison_leaf=leaf)
+    sup = Supervisor.for_problems([pa, pb], chaos=chaos,
+                                  n_lanes=2, segment_len=4)
+    sup.submit(pa, generations=16, seed=3, name="poisoned")
+    sup.submit(pb, generations=12, seed=4, name="healthy")
+    results = {r.name: r for r in sup.drain()}
+    bad = results["poisoned"]
+    assert not bad.ok and check in bad.error and bad.front is None
+    assert bad.generations_run == 8        # two 4-gen segments ran
+    assert sup.stats["quarantined"] == 1
+    _assert_healthy_match(results["healthy"], db, cfg, 4)
+
+
+def test_freed_quarantine_slot_backfills(stream):
+    """A quarantined lane's slot admits the next queued job, which then
+    retires healthy and bit-identical (the poison did not stick to the
+    lane)."""
+    (da, pa), cfg = stream["a"], stream["cfg"]
+    chaos = ChaosPlan(poison={0: 0}, poison_leaf="pop")
+    sup = Supervisor.for_problems([pa], chaos=chaos, n_lanes=1,
+                                  segment_len=4)
+    sup.submit(pa, generations=16, seed=0, name="poisoned")
+    sup.submit(pa, generations=8, seed=1, name="successor")
+    results = {r.name: r for r in sup.drain()}
+    assert not results["poisoned"].ok
+    assert results["successor"].admitted_segment >= 1
+    _assert_healthy_match(results["successor"], da, cfg, 1)
+
+
+def test_transient_segment_fault_retried_bit_identical(stream):
+    (da, pa), cfg = stream["a"], stream["cfg"]
+    chaos = ChaosPlan(segment_faults=(0, 2))
+    sup = Supervisor.for_problems([pa], FaultPolicy(backoff_base_s=0.0),
+                                  chaos=chaos, sleep=lambda s: None,
+                                  n_lanes=1, segment_len=4)
+    sup.submit(pa, generations=16, seed=5, name="j")
+    r = sup.drain()[0]
+    assert sup.stats["retries"] == 2
+    _assert_healthy_match(r, da, cfg, 5)
+
+
+def test_transient_io_error_retried(stream, tmp_path):
+    from repro.checkpoint import latest_valid_step
+    (_, pa) = stream["a"]
+    chaos = ChaosPlan(io_errors=(1,))
+    sup = Supervisor.for_problems(
+        [pa], FaultPolicy(checkpoint_every=2, backoff_base_s=0.0),
+        directory=str(tmp_path), chaos=chaos, sleep=lambda s: None,
+        n_lanes=1, segment_len=4)
+    sup.submit(pa, generations=16, seed=0)
+    sup.drain()
+    assert sup.stats["retries"] == 1
+    assert sup.stats["checkpoints"] == 2
+    assert latest_valid_step(str(tmp_path)) == 4
+
+
+def test_backoff_caps_and_exhausts(stream):
+    """_attempt's delay sequence is base·2^k capped at backoff_cap_s,
+    and a fault outlasting max_retries propagates."""
+    (_, pa) = stream["a"]
+    sleeps = []
+    sup = Supervisor.for_problems(
+        [pa], FaultPolicy(max_retries=4, backoff_base_s=0.1,
+                          backoff_cap_s=0.25),
+        sleep=sleeps.append, n_lanes=1)
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise SegmentFault("still down")
+        return "up"
+
+    assert sup._attempt(flaky, "x") == "up"
+    assert sleeps == [0.1, 0.2, 0.25]
+    assert sup.stats["retries"] == 3
+
+    def dead():
+        raise ChaosIOError("disk gone")
+
+    with pytest.raises(ChaosIOError):
+        sup._attempt(dead, "x")
+    assert sup.stats["retries"] == 7      # 3 + max_retries more
+
+
+def test_kill_is_fatal_not_retried(stream):
+    (_, pa) = stream["a"]
+    chaos = ChaosPlan(kill_after_segment=0)
+    sup = Supervisor.for_problems([pa], chaos=chaos, n_lanes=1,
+                                  segment_len=4)
+    sup.submit(pa, generations=16, seed=0)
+    with pytest.raises(ChaosKill):
+        sup.drain()
+    assert sup.stats["retries"] == 0
+
+
+def test_fault_schedule_fires_once(stream):
+    """Fire-once semantics: the same ChaosPlan instance never replays a
+    scheduled fault, so the retry after a transient succeeds instead of
+    looping to exhaustion."""
+    plan = ChaosPlan(segment_faults=(3,))
+    with pytest.raises(SegmentFault):
+        plan.on_segment(3)
+    plan.on_segment(3)                     # second call: silent
+    plan.on_segment(4)                     # unscheduled: silent
+
+
+def test_poison_leaf_validated():
+    with pytest.raises(ValueError, match="poison_leaf"):
+        ChaosPlan(poison_leaf="crowd")

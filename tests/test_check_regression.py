@@ -107,3 +107,42 @@ def test_missing_ceiling_key_fails():
     del fresh["mc_k8_overhead_vs_k1"]
     failures, _ = check(_full(3.0), fresh, 0.20)
     assert any("mc_k8_overhead_vs_k1" in f for f in failures)
+
+
+def test_missing_keys_rollup_lists_every_key():
+    """A gated metric absent from the fresh results is a bench
+    regression (the run stopped measuring it), and the failure must
+    name EVERY missing key explicitly — distinguishable from the
+    cpu_count-mismatch SKIP path, which is measured-but-not-comparable."""
+    fresh = _full(3.0)
+    del fresh["ranking_speedup_vs_matrix"]
+    del fresh["serve_throughput_speedup_vs_static"]
+    del fresh["mc_k8_overhead_vs_k1"]
+    failures, lines = check(_full(3.0), fresh, 0.20)
+    rollup = [f for f in failures if "missing from fresh" in f]
+    assert len(rollup) == 1, failures
+    for key in ("ranking_speedup_vs_matrix",
+                "serve_throughput_speedup_vs_static",
+                "mc_k8_overhead_vs_k1"):
+        assert key in rollup[0], f"{key} not named in the roll-up"
+    assert "3 gated metric(s)" in rollup[0]
+    assert not any("SKIP" in ln and "missing" in ln for ln in lines)
+
+
+def test_missing_and_skipped_are_distinct():
+    """cpu_count mismatch alone must NOT produce the missing-keys error."""
+    failures, lines = check(_full(3.0, cpu_count=4), _full(3.0, cpu_count=1),
+                            0.20)
+    assert failures == []
+    assert not any("missing from fresh" in ln for ln in lines)
+
+
+def test_supervised_overhead_ceiling_is_gated():
+    assert ABSOLUTE_CEILINGS["supervised_overhead_vs_bare"] == 1.10
+
+
+def test_supervised_overhead_ceiling_unconditional():
+    fresh = _full(3.0, cpu_count=1)
+    fresh["supervised_overhead_vs_bare"] = 1.25    # above the 1.10 ceiling
+    failures, _ = check(_full(3.0, cpu_count=4), fresh, 0.20)
+    assert any("supervised_overhead_vs_bare" in f for f in failures)

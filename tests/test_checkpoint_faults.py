@@ -1,0 +1,163 @@
+"""Two-phase-commit crash points and checkpoint integrity
+(``repro.checkpoint.manager`` + ``repro.serve.chaos.corrupt_checkpoint``).
+
+The store's contract under faults: a crash at ANY instant of a save
+leaves the directory restorable to the last *committed* step —
+  * killed between the tmp-write and the atomic rename → only a ``.tmp``
+    directory remains, invisible to ``latest_step``/``list_steps``;
+  * killed after a partial tmp write → same;
+and post-commit damage (truncation, bit flips, manifest rot) is caught
+by per-leaf size/crc verification (``CheckpointCorruptError``), with
+``latest_valid_step`` skipping back over damaged steps to the newest
+intact one.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                              latest_valid_step, list_steps,
+                              restore_checkpoint, save_checkpoint,
+                              verify_checkpoint)
+from repro.checkpoint import manager
+from repro.serve.chaos import corrupt_checkpoint
+
+
+def _payload(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((8, 16)).astype(np.float32),
+            "step_count": np.int64(seed),
+            "ids": np.arange(seed + 4, dtype=np.int32)}
+
+
+def _target():
+    return {"w": np.zeros((8, 16), np.float32), "step_count": np.int64(0),
+            "ids": np.zeros(0, np.int32)}
+
+
+def _assert_restores(directory, step, seed):
+    got = restore_checkpoint(directory, step, _target())
+    np.testing.assert_array_equal(np.asarray(got["w"]), _payload(seed)["w"])
+    assert int(got["step_count"]) == seed
+
+
+class TestCrashPoints:
+    def test_kill_between_tmp_write_and_rename(self, tmp_path, monkeypatch):
+        """The narrowest two-phase window: every file of step 2 is fully
+        written but the process dies before the atomic rename. Restore
+        must land on committed step 1; the .tmp directory is invisible."""
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+
+        def die(src, dst):
+            raise OSError("killed between tmp write and rename")
+
+        monkeypatch.setattr(os, "rename", die)
+        with pytest.raises(OSError, match="killed between"):
+            save_checkpoint(d, 2, _payload(2))
+        monkeypatch.undo()
+
+        assert os.path.isdir(os.path.join(d, "step_00000002.tmp"))
+        assert list_steps(d) == [1]
+        assert latest_step(d) == 1
+        assert latest_valid_step(d) == 1
+        _assert_restores(d, 1, 1)
+        # a later save of the same step commits cleanly over the orphan
+        save_checkpoint(d, 2, _payload(2))
+        assert latest_valid_step(d) == 2
+        _assert_restores(d, 2, 2)
+
+    def test_kill_after_partial_tmp_write(self, tmp_path, monkeypatch):
+        """Death mid-write: only some leaf files of step 2 exist, no
+        manifest. The half-written tmp never shadows committed step 1."""
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+
+        calls = {"n": 0}
+        real = manager._npy_bytes
+
+        def die_after_first(arr):
+            calls["n"] += 1
+            if calls["n"] > 1:
+                raise OSError("killed mid tmp write")
+            return real(arr)
+
+        monkeypatch.setattr(manager, "_npy_bytes", die_after_first)
+        with pytest.raises(OSError, match="mid tmp write"):
+            save_checkpoint(d, 2, _payload(2))
+        monkeypatch.undo()
+
+        tmp = os.path.join(d, "step_00000002.tmp")
+        assert os.path.isdir(tmp)
+        assert not os.path.exists(os.path.join(tmp, "manifest.json"))
+        assert list_steps(d) == [1]
+        assert latest_valid_step(d) == 1
+        _assert_restores(d, 1, 1)
+
+
+class TestIntegrity:
+    @pytest.mark.parametrize("kind", ["truncate", "bitflip"])
+    def test_damaged_leaf_rejected_with_clear_error(self, tmp_path, kind):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        corrupt_checkpoint(d, 1, kind=kind, leaf="w", seed=3)
+        with pytest.raises(CheckpointCorruptError, match="leaf 'w'"):
+            verify_checkpoint(d, 1)
+        with pytest.raises(CheckpointCorruptError,
+                           match="truncated|bit-flipped|crc"):
+            restore_checkpoint(d, 1, _target())
+
+    @pytest.mark.parametrize("kind", ["truncate", "bitflip"])
+    def test_latest_valid_step_skips_damaged(self, tmp_path, kind):
+        """Post-commit rot on the newest step: recovery must fall back to
+        the previous intact checkpoint, not fail outright."""
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        save_checkpoint(d, 2, _payload(2))
+        corrupt_checkpoint(d, 2, kind=kind, seed=5)
+        assert latest_step(d) == 2              # committed, but damaged
+        assert latest_valid_step(d) == 1
+        _assert_restores(d, 1, 1)
+
+    def test_unreadable_manifest_rejected(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        with open(os.path.join(d, "step_00000001", "manifest.json"),
+                  "w") as f:
+            f.write("{not json")
+        with pytest.raises(CheckpointCorruptError, match="manifest"):
+            verify_checkpoint(d, 1)
+        assert latest_valid_step(d) is None
+
+    def test_missing_leaf_file_rejected(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        os.remove(os.path.join(d, "step_00000001", "ids.npy"))
+        with pytest.raises(CheckpointCorruptError, match="missing"):
+            verify_checkpoint(d, 1)
+
+    def test_manifest_records_file_crc_and_size(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        with open(os.path.join(d, "step_00000001", "manifest.json")) as f:
+            manifest = json.load(f)
+        for name, meta in manifest["leaves"].items():
+            fn = os.path.join(d, "step_00000001", name + ".npy")
+            assert meta["file_size"] == os.path.getsize(fn), name
+            assert {"crc32", "file_crc32"} <= set(meta), name
+
+    def test_intact_checkpoint_verifies_and_restores(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 7, _payload(7))
+        manifest = verify_checkpoint(d, 7)
+        assert manifest["step"] == 7
+        assert latest_valid_step(d) == 7
+        _assert_restores(d, 7, 7)
+
+    def test_corrupt_kind_validated(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _payload(1))
+        with pytest.raises(ValueError, match="kind"):
+            corrupt_checkpoint(d, 1, kind="arson")
